@@ -1,0 +1,50 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-JAX dataflow vs oracle.
+
+Wall-clock here is CPU interpret-mode time (NOT TPU performance — the roofline
+story lives in EXPERIMENTS.md §Roofline); what this bench establishes is
+correctness at size, plan-build cost, and that the dataflow selector's choice
+agrees with the best measured dataflow on memory-traffic-dominated shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import LayerShape, estimate_all, random_sparse_dense
+from repro.kernels import spmm_ref, spmm_with_dataflow
+from .common import Row
+
+
+def _time(fn, reps=3):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    np.asarray(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(7)
+    cases = [
+        ("sq_like", 64, 64, 128, 0.3, 0.9),
+        ("op_like", 64, 256, 64, 0.1, 0.5),
+        ("gust_like", 128, 128, 64, 0.5, 0.2),
+    ]
+    bs = (16, 16, 16)
+    for name, m, k, n, da, db in cases:
+        a = random_sparse_dense(rng, (m, k), density=da, block_shape=bs[:2])
+        b = random_sparse_dense(rng, (k, n), density=db, block_shape=bs[1:])
+        ref = np.asarray(spmm_ref(a, b))
+        for df in ("ip_m", "op_m", "gust_m"):
+            us = _time(lambda df=df: spmm_with_dataflow(a, b, df, bs))
+            out = np.asarray(spmm_with_dataflow(a, b, df, bs))
+            err = float(np.abs(out - ref).max())
+            rows.append(Row(f"kernels/{name}/{df}", us, f"max_err={err:.1e}"))
+        ests = estimate_all(
+            LayerShape(m, k, n, da, db, block=bs))
+        sel = min(ests.values(), key=lambda e: e.time_s).dataflow
+        rows.append(Row(f"kernels/{name}/selector", 0.0, f"choice={sel}"))
+    return rows

@@ -1,0 +1,60 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints the ``name,us_per_call,derived`` CSV contract.  Sections:
+  fig1    — best dataflow per layer, per model
+  fig12   — end-to-end speedups (CPU MKL + 4 accelerators)
+  fig13   — layer-wise speedups on the nine Table 6 layers
+  fig14-16— on-chip traffic, miss rates, off-chip traffic
+  table8  — area/power breakdown + Fig 17 naive-vs-unified
+  fig18   — performance/area efficiency
+  kernels — Pallas kernels vs oracle (interpret mode)
+  roofline— dry-run roofline summary (if launch/dryrun artifacts exist)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def _sections():
+    from . import (fig1_best_dataflow, fig12_end_to_end, fig13_layerwise,
+                   fig14_traffic, table4_transitions, table8_area,
+                   fig18_perf_area, kernels_bench)
+    secs = [
+        ("fig1", fig1_best_dataflow),
+        ("fig12", fig12_end_to_end),
+        ("fig13", fig13_layerwise),
+        ("fig14-16", fig14_traffic),
+        ("table4", table4_transitions),
+        ("table8", table8_area),
+        ("fig18", fig18_perf_area),
+        ("kernels", kernels_bench),
+    ]
+    try:
+        from . import roofline_report
+        secs.append(("roofline", roofline_report))
+    except ImportError:
+        pass
+    return secs
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in _sections():
+        if only and only != name:
+            continue
+        try:
+            for row in mod.run():
+                print(row.csv())
+        except Exception:
+            failed += 1
+            print(f"{name}/ERROR,0,exception")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

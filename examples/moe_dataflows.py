@@ -1,0 +1,58 @@
+"""The paper's thesis inside the LM framework: MoE dispatch as SpMSpM with
+three selectable dataflows.
+
+Runs one MoE layer under the einsum (IP-analogue), scatter (OP-analogue) and
+sort (Gust-analogue) dispatch strategies across several token counts: all
+three agree numerically, their costs diverge exactly the way the paper's
+dataflows do, and the phase-1 selector picks per shape.
+
+Run:  PYTHONPATH=src python examples/moe_dataflows.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.moe import moe_apply, moe_init, select_moe_strategy
+
+
+def bench(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return out, (time.perf_counter() - t0) / reps * 1e3
+
+
+def main():
+    cfg = ModelConfig(
+        name="demo", family="moe", n_layers=1, d_model=256, n_heads=4,
+        d_ff=512, vocab=1024,
+        moe=MoEConfig(num_experts=16, top_k=2, capacity_factor=2.0))
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+
+    for tokens in (64, 1024, 8192):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, tokens, cfg.d_model),
+                              jnp.bfloat16)
+        outs, times = {}, {}
+        for strat in ("einsum", "scatter", "sort"):
+            f = jax.jit(lambda p, x, s=strat: moe_apply(p, cfg, x, strategy=s))
+            outs[strat], times[strat] = bench(f, params, x)
+        ref = np.asarray(outs["scatter"], np.float32)
+        errs = {s: float(np.abs(np.asarray(o, np.float32) - ref).max())
+                for s, o in outs.items()}
+        sel = select_moe_strategy(tokens, cfg.d_model, cfg.d_ff,
+                                  cfg.moe.num_experts, cfg.moe.top_k)
+        print(f"T={tokens:6d}: "
+              + "  ".join(f"{s}={times[s]:7.1f}ms(err {errs[s]:.0e})"
+                          for s in times)
+              + f"   selector -> {sel}")
+    print("(same computation, three loop orders, shape-dependent winner — "
+          "the Flexagon observation, alive in an LLM)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Serving example: batched requests through the continuous-batching engine.
+
+Mixed-length prompts share fused decode steps; slots free up and refill from
+the queue as sequences finish (per-slot position vectors keep the KV cache
+consistent).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--arch qwen2-1.5b]
+"""
+import argparse
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    args = ap.parse_args()
+    serve_driver.main(["--arch", args.arch, "--smoke", "--requests", "10",
+                       "--slots", "4", "--max-new", "12"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,350 @@
+"""The six SpMSpM dataflows (paper §2.2, Table 3) over block-sparse operands.
+
+``C[M,N] = A[M,K] @ B[K,N]`` via three loop orders × two stationarity variants:
+
+=========  =============  ==========  =========  =========  =========
+loop       name           stationary  A format   B format   C format
+=========  =============  ==========  =========  =========  =========
+MNK        ip_m           C (fiber A) BCSR       BCSC       CSR-major
+KMN        op_m           A           BCSC       BCSR       CSR-major
+MKN        gust_m         A (fiber C) BCSR       BCSR       CSR-major
+NMK        ip_n           C (fiber B) BCSR       BCSC       CSC-major
+KNM        op_n           B           BCSC       BCSR       CSC-major
+NKM        gust_n         B (fiber C) BCSC       BCSC       CSC-major
+=========  =============  ==========  =========  =========  =========
+
+Each function is a *pure-JAX reference* whose gather/scatter structure mirrors
+the hardware dataflow:
+
+- **IP**: per C block, co-iterate the *intersection* of the A-row and B-column
+  fibers (the paper's intersection unit); full sums only, no psum traffic.
+- **OP**: K outermost; every k produces a rank-1 (block) update scattered into
+  C — psums merged across k by accumulation (the paper's merge phase; on TPU
+  blocks have dense coordinates, so merging sorted fibers degenerates to
+  indexed accumulate — see DESIGN.md §3).
+- **Gust**: row-by-row leader-follower — each nonzero A element gathers the
+  whole matching B fiber; psums stay within the current output fiber.
+
+All six produce bit-identical C (up to float reassociation) — asserted by the
+property tests.  Host-side *plans* (padded index arrays) are shared with the
+Pallas kernels in :mod:`repro.kernels`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import BlockCSR, BlockCSC, dense_to_bcsr, dense_to_bcsc
+
+__all__ = [
+    "IPPlan",
+    "StreamPlan",
+    "build_ip_plan",
+    "build_op_plan",
+    "build_gust_plan",
+    "ip_m",
+    "op_m",
+    "gust_m",
+    "ip_n",
+    "op_n",
+    "gust_n",
+    "run_dataflow",
+    "DATAFLOWS",
+    "OUTPUT_MAJOR",
+]
+
+DATAFLOWS = ("ip_m", "op_m", "gust_m", "ip_n", "op_n", "gust_n")
+
+#: Output layout per dataflow (paper Table 3): M-stationary → row-major (CSR),
+#: N-stationary → column-major (CSC).  Drives inter-layer format legality.
+OUTPUT_MAJOR = {
+    "ip_m": "csr", "op_m": "csr", "gust_m": "csr",
+    "ip_n": "csc", "op_n": "csc", "gust_n": "csc",
+}
+
+
+# ---------------------------------------------------------------------------
+# Plans — host-side, numpy.  Shared between JAX refs and Pallas kernels.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class IPPlan:
+    """Per-C-block intersection lists, padded to the max intersection length.
+
+    pair_a/pair_b: (Mb, Nb, P) int32 slots into A.data / B.data.
+    npairs:        (Mb, Nb) int32 — number of valid pairs per C block.
+    """
+
+    pair_a: np.ndarray
+    pair_b: np.ndarray
+    npairs: np.ndarray
+    max_pairs: int
+
+
+@dataclasses.dataclass
+class StreamPlan:
+    """Flat (a_slot, b_slot, ci, cj) work list for OP/Gust dataflows.
+
+    The *order* of the list is the loop order of the dataflow: k-major for OP
+    (each k's rank-1 update contiguous), i-major for Gust (each output fiber's
+    work contiguous).  ``seg_ptr`` delimits the outer-loop segments.
+    """
+
+    a_slot: np.ndarray
+    b_slot: np.ndarray
+    ci: np.ndarray
+    cj: np.ndarray
+    seg_ptr: np.ndarray   # (outer+1,) segment boundaries in the flat list
+    order: str            # "k" (OP) or "i" (Gust)
+
+
+def build_ip_plan(a: BlockCSR, b: BlockCSC) -> IPPlan:
+    """Intersect every A row fiber with every B column fiber (paper: the
+    scalar-vs-scalar intersection of IP, lifted to block coordinates)."""
+    mb, kb = a.grid
+    kb2, nb = b.grid
+    assert kb == kb2, (a.grid, b.grid)
+    a_indptr = np.asarray(a.indptr)
+    a_indices = np.asarray(a.indices)
+    b_indptr = np.asarray(b.indptr)
+    b_indices = np.asarray(b.indices)
+
+    pairs: list[list[tuple[np.ndarray, np.ndarray]]] = []
+    max_pairs = 1
+    for i in range(mb):
+        arow_k = a_indices[a_indptr[i]: a_indptr[i + 1]]
+        arow_slot = np.arange(a_indptr[i], a_indptr[i + 1])
+        row = []
+        for j in range(nb):
+            bcol_k = b_indices[b_indptr[j]: b_indptr[j + 1]]
+            bcol_slot = np.arange(b_indptr[j], b_indptr[j + 1])
+            common, ia, ib = np.intersect1d(
+                arow_k, bcol_k, assume_unique=True, return_indices=True
+            )
+            del common
+            row.append((arow_slot[ia], bcol_slot[ib]))
+            max_pairs = max(max_pairs, len(ia))
+        pairs.append(row)
+
+    pair_a = np.zeros((mb, nb, max_pairs), dtype=np.int32)
+    pair_b = np.zeros((mb, nb, max_pairs), dtype=np.int32)
+    npairs = np.zeros((mb, nb), dtype=np.int32)
+    for i in range(mb):
+        for j in range(nb):
+            sa, sb = pairs[i][j]
+            npairs[i, j] = len(sa)
+            pair_a[i, j, : len(sa)] = sa
+            pair_b[i, j, : len(sb)] = sb
+    return IPPlan(pair_a, pair_b, npairs, max_pairs)
+
+
+def build_op_plan(a: BlockCSC, b: BlockCSR) -> StreamPlan:
+    """K-outermost cross products: for every k, pair each stationary A column
+    element with each streamed B row element (rank-1 block update)."""
+    mb, kb = a.grid
+    kb2, nb = b.grid
+    assert kb == kb2
+    a_indptr = np.asarray(a.indptr)
+    a_indices = np.asarray(a.indices)       # block-row coords of A col fibers
+    b_indptr = np.asarray(b.indptr)
+    b_indices = np.asarray(b.indices)       # block-col coords of B row fibers
+
+    a_s, b_s, ci, cj, seg = [], [], [], [], [0]
+    for k in range(kb):
+        a_slots = np.arange(a_indptr[k], a_indptr[k + 1])
+        a_rows = a_indices[a_indptr[k]: a_indptr[k + 1]]
+        b_slots = np.arange(b_indptr[k], b_indptr[k + 1])
+        b_cols = b_indices[b_indptr[k]: b_indptr[k + 1]]
+        if len(a_slots) and len(b_slots):
+            aa, bb = np.meshgrid(a_slots, b_slots, indexing="ij")
+            rr, cc = np.meshgrid(a_rows, b_cols, indexing="ij")
+            a_s.append(aa.ravel())
+            b_s.append(bb.ravel())
+            ci.append(rr.ravel())
+            cj.append(cc.ravel())
+        seg.append(seg[-1] + (len(a_slots) * len(b_slots)))
+    cat = lambda xs: (
+        np.concatenate(xs).astype(np.int32) if xs else np.zeros(0, np.int32)
+    )
+    return StreamPlan(cat(a_s), cat(b_s), cat(ci), cat(cj),
+                      np.asarray(seg, np.int64), order="k")
+
+
+def build_gust_plan(a: BlockCSR, b: BlockCSR) -> StreamPlan:
+    """Row-major leader-follower: each A element (i,k) pulls B's whole row-k
+    fiber; all work for output fiber *i* is contiguous."""
+    mb, kb = a.grid
+    kb2, nb = b.grid
+    assert kb == kb2
+    a_indptr = np.asarray(a.indptr)
+    a_indices = np.asarray(a.indices)
+    b_indptr = np.asarray(b.indptr)
+    b_indices = np.asarray(b.indices)
+
+    a_s, b_s, ci, cj, seg = [], [], [], [], [0]
+    count = 0
+    for i in range(mb):
+        for a_slot in range(a_indptr[i], a_indptr[i + 1]):
+            k = a_indices[a_slot]
+            lo, hi = b_indptr[k], b_indptr[k + 1]
+            n = hi - lo
+            if n:
+                a_s.append(np.full(n, a_slot, np.int32))
+                b_s.append(np.arange(lo, hi, dtype=np.int32))
+                ci.append(np.full(n, i, np.int32))
+                cj.append(b_indices[lo:hi].astype(np.int32))
+                count += int(n)
+        seg.append(count)
+    cat = lambda xs: (
+        np.concatenate(xs).astype(np.int32) if xs else np.zeros(0, np.int32)
+    )
+    return StreamPlan(cat(a_s), cat(b_s), cat(ci), cat(cj),
+                      np.asarray(seg, np.int64), order="i")
+
+
+# ---------------------------------------------------------------------------
+# JAX reference executions
+# ---------------------------------------------------------------------------
+
+
+def _dense_grid_shape(a_grid, b_grid, block_a, block_b):
+    mb, _ = a_grid
+    _, nb = b_grid
+    return mb, nb, block_a[0], block_b[1]
+
+
+def ip_m(a: BlockCSR, b: BlockCSC, plan: IPPlan | None = None) -> jax.Array:
+    """Inner Product, M-stationary (MNK).  No partial sums leave the C block."""
+    if plan is None:
+        plan = build_ip_plan(a, b)
+    if a.nnzb == 0 or b.nnzb == 0:
+        return jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    mb, nb, bm, bn = _dense_grid_shape(a.grid, b.grid, a.block_shape, b.block_shape)
+    pair_a = jnp.asarray(plan.pair_a)
+    pair_b = jnp.asarray(plan.pair_b)
+    npairs = jnp.asarray(plan.npairs)
+
+    def c_block(pa, pb, n):
+        ablk = a.data[pa]                                   # (P, bm, bk)
+        bblk = b.data[pb]                                   # (P, bk, bn)
+        mask = (jnp.arange(pa.shape[0]) < n)[:, None, None]
+        ablk = jnp.where(mask, ablk, 0)
+        # full-sum reduce over the intersected K fiber (FAN-reduce analogue)
+        return jnp.einsum("pij,pjk->ik", ablk, bblk,
+                          preferred_element_type=jnp.float32)
+
+    c = jax.vmap(jax.vmap(c_block))(pair_a, pair_b, npairs)  # (Mb, Nb, bm, bn)
+    c = c.swapaxes(1, 2).reshape(mb * bm, nb * bn)
+    return c[: a.shape[0], : b.shape[1]]
+
+
+def _stream_execute(a_data, b_data, plan: StreamPlan, out_grid, blocks, m, n):
+    """Shared OP/Gust executor: flat block-GEMM work list + coordinate-indexed
+    psum accumulation (the PSRAM/merge analogue)."""
+    mb, nb = out_grid
+    bm, bn = blocks
+    if plan.a_slot.size == 0:
+        return jnp.zeros((m, n), jnp.float32)
+    a_blk = a_data[jnp.asarray(plan.a_slot)]                # (W, bm, bk)
+    b_blk = b_data[jnp.asarray(plan.b_slot)]                # (W, bk, bn)
+    psums = jnp.einsum("wij,wjk->wik", a_blk, b_blk,
+                       preferred_element_type=jnp.float32)  # (W, bm, bn)
+    c = jnp.zeros((mb, nb, bm, bn), psums.dtype)
+    c = c.at[jnp.asarray(plan.ci), jnp.asarray(plan.cj)].add(psums)
+    c = c.swapaxes(1, 2).reshape(mb * bm, nb * bn)
+    return c[:m, :n]
+
+
+def op_m(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None) -> jax.Array:
+    """Outer Product, M-stationary (KMN).  Every k streams a rank-1 update."""
+    if plan is None:
+        plan = build_op_plan(a, b)
+    mb = a.grid[0]
+    nb = b.grid[1]
+    return _stream_execute(a.data, b.data, plan, (mb, nb),
+                           (a.block_shape[0], b.block_shape[1]),
+                           a.shape[0], b.shape[1])
+
+
+def gust_m(a: BlockCSR, b: BlockCSR, plan: StreamPlan | None = None) -> jax.Array:
+    """Gustavson, M-stationary (MKN).  Leader-follower row gather."""
+    if plan is None:
+        plan = build_gust_plan(a, b)
+    mb = a.grid[0]
+    nb = b.grid[1]
+    return _stream_execute(a.data, b.data, plan, (mb, nb),
+                           (a.block_shape[0], b.block_shape[1]),
+                           a.shape[0], b.shape[1])
+
+
+# --- N-stationary variants via the transpose duality:  C = (Bᵀ Aᵀ)ᵀ --------
+#
+# A BlockCSC of X carries exactly the fibers of Xᵀ in BlockCSR layout (same
+# data blocks, transposed within-block), so the N variants reuse the M
+# executors on swapped, transposed operands — mirroring the paper's remark
+# that N-stationary runs "in the same manner by exchanging matrices A and B".
+
+
+def _transpose_bcsr_of(x: BlockCSC) -> BlockCSR:
+    return BlockCSR(
+        jnp.swapaxes(x.data, 1, 2), x.indptr, x.indices,
+        (x.shape[1], x.shape[0]), (x.block_shape[1], x.block_shape[0]),
+    )
+
+
+def _transpose_bcsc_of(x: BlockCSR) -> BlockCSC:
+    return BlockCSC(
+        jnp.swapaxes(x.data, 1, 2), x.indptr, x.indices,
+        (x.shape[1], x.shape[0]), (x.block_shape[1], x.block_shape[0]),
+    )
+
+
+def ip_n(a: BlockCSR, b: BlockCSC, plan: IPPlan | None = None) -> jax.Array:
+    """Inner Product, N-stationary (NMK): IP over (Bᵀ, Aᵀ), transposed."""
+    bt = _transpose_bcsr_of(b)
+    at = _transpose_bcsc_of(a)
+    return ip_m(bt, at, plan).T
+
+
+def op_n(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None) -> jax.Array:
+    """Outer Product, N-stationary (KNM)."""
+    bt = _transpose_bcsc_of(b)
+    at = _transpose_bcsr_of(a)
+    return op_m(bt, at, plan).T
+
+
+def gust_n(a: BlockCSC, b: BlockCSC, plan: StreamPlan | None = None) -> jax.Array:
+    """Gustavson, N-stationary (NKM): B's fibers lead, A follows."""
+    bt = _transpose_bcsr_of(b)
+    at = _transpose_bcsr_of(a)
+    return gust_m(bt, at, plan).T
+
+
+# ---------------------------------------------------------------------------
+# Convenience driver matching Table 3's format requirements
+# ---------------------------------------------------------------------------
+
+
+def run_dataflow(name: str, a_dense, b_dense,
+                 block_shape: Tuple[int, int] = (8, 8)) -> jax.Array:
+    """Compress operands per Table 3 for ``name`` and execute it."""
+    bs = block_shape
+    bs_b = (block_shape[1], block_shape[1])
+    if name == "ip_m":
+        return ip_m(dense_to_bcsr(a_dense, bs), dense_to_bcsc(b_dense, bs_b))
+    if name == "op_m":
+        return op_m(dense_to_bcsc(a_dense, bs), dense_to_bcsr(b_dense, bs_b))
+    if name == "gust_m":
+        return gust_m(dense_to_bcsr(a_dense, bs), dense_to_bcsr(b_dense, bs_b))
+    if name == "ip_n":
+        return ip_n(dense_to_bcsr(a_dense, bs), dense_to_bcsc(b_dense, bs_b))
+    if name == "op_n":
+        return op_n(dense_to_bcsc(a_dense, bs), dense_to_bcsr(b_dense, bs_b))
+    if name == "gust_n":
+        return gust_n(dense_to_bcsc(a_dense, bs), dense_to_bcsc(b_dense, bs_b))
+    raise ValueError(f"unknown dataflow {name!r}; expected one of {DATAFLOWS}")

@@ -1,0 +1,371 @@
+"""Sparse matrix formats.
+
+Two families live here:
+
+1. **Block formats** (``BlockCSR``, ``BlockCSC``) — TPU-native adaptation of the
+   paper's CSR/CSC fibers.  Values are stored as dense, MXU-aligned
+   ``(bm, bk)`` blocks; the coordinate structure (indptr/indices) is kept at
+   *block* granularity.  A block is "present" iff it contains at least one
+   nonzero scalar.  These feed the JAX dataflow references
+   (:mod:`repro.core.dataflows`) and the Pallas kernels
+   (:mod:`repro.kernels`).
+
+2. **Scalar formats** (``CSR``, ``CSC``) — numpy-level, element granularity.
+   These model the paper's fibers exactly — each fiber is a coordinate-sorted
+   list of (coordinate, value) duples — and are consumed by the cycle-level
+   accelerator simulator (:mod:`repro.core.simulator`).
+
+Terminology follows the paper (§2.1): a *fiber* is one compressed row (CSR) or
+column (CSC); an *element* is one (coordinate, value) duple.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockCSR",
+    "BlockCSC",
+    "CSR",
+    "CSC",
+    "block_partition",
+    "dense_to_bcsr",
+    "dense_to_bcsc",
+    "random_block_sparse",
+    "random_sparse_dense",
+    "block_occupancy",
+]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_to_blocks(x, block_shape):
+    """Zero-pad a 2-D array so both dims are multiples of ``block_shape``."""
+    m, k = x.shape
+    bm, bk = block_shape
+    pm, pk = _ceil_div(m, bm) * bm, _ceil_div(k, bk) * bk
+    if (pm, pk) == (m, k):
+        return x
+    if isinstance(x, np.ndarray):
+        out = np.zeros((pm, pk), dtype=x.dtype)
+        out[:m, :k] = x
+        return out
+    return jnp.pad(x, ((0, pm - m), (0, pk - k)))
+
+
+def block_partition(x, block_shape) -> np.ndarray:
+    """Reshape a (padded) dense matrix to (Mb, Kb, bm, bk) block layout."""
+    x = _pad_to_blocks(np.asarray(x), block_shape)
+    m, k = x.shape
+    bm, bk = block_shape
+    return x.reshape(m // bm, bm, k // bk, bk).swapaxes(1, 2)
+
+
+def block_occupancy(x, block_shape) -> np.ndarray:
+    """Boolean (Mb, Kb) bitmap: block present iff any scalar nonzero.
+
+    This is the TPU analogue of the paper's fiber structure: the bitmap plus
+    the block index lists fully describe which (coordinate, value-block)
+    elements exist.
+    """
+    blocks = block_partition(x, block_shape)
+    return np.asarray((np.abs(blocks) > 0).any(axis=(2, 3)))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockCSR:
+    """Block compressed sparse row.  Fibers = block rows, sorted by block col.
+
+    data:    (nnzb, bm, bk) dense value blocks, row-major fiber order.
+    indptr:  (Mb + 1,) int32 — fiber start offsets into ``data``.
+    indices: (nnzb,) int32 — block-column coordinate of each element.
+    """
+
+    data: jax.Array
+    indptr: jax.Array
+    indices: jax.Array
+    shape: Tuple[int, int]          # logical (unpadded) dense shape
+    block_shape: Tuple[int, int]
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.indptr, self.indices), (self.shape, self.block_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, indptr, indices = children
+        shape, block_shape = aux
+        return cls(data, indptr, indices, shape, block_shape)
+
+    # -- derived sizes ---------------------------------------------------
+    @property
+    def nnzb(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        bm, bk = self.block_shape
+        return _ceil_div(self.shape[0], bm), _ceil_div(self.shape[1], bk)
+
+    @property
+    def density(self) -> float:
+        mb, kb = self.grid
+        return self.nnzb / max(1, mb * kb)
+
+    def todense(self) -> jax.Array:
+        mb, kb = self.grid
+        bm, bk = self.block_shape
+        out = jnp.zeros((mb, kb, bm, bk), self.data.dtype)
+        rows = jnp.repeat(
+            jnp.arange(mb), jnp.diff(self.indptr), total_repeat_length=self.nnzb
+        )
+        out = out.at[rows, self.indices].set(self.data)
+        out = out.swapaxes(1, 2).reshape(mb * bm, kb * bk)
+        return out[: self.shape[0], : self.shape[1]]
+
+    def bitmap(self) -> np.ndarray:
+        mb, kb = self.grid
+        bit = np.zeros((mb, kb), dtype=bool)
+        indptr = np.asarray(self.indptr)
+        indices = np.asarray(self.indices)
+        rows = np.repeat(np.arange(mb), np.diff(indptr))
+        bit[rows, indices] = True
+        return bit
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockCSC:
+    """Block compressed sparse column.  Fibers = block cols, sorted by row.
+
+    data:    (nnzb, bm, bk) dense value blocks, column-major fiber order.
+    indptr:  (Kb + 1,) int32 — fiber start offsets.
+    indices: (nnzb,) int32 — block-row coordinate of each element.
+    """
+
+    data: jax.Array
+    indptr: jax.Array
+    indices: jax.Array
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.data, self.indptr, self.indices), (self.shape, self.block_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, indptr, indices = children
+        shape, block_shape = aux
+        return cls(data, indptr, indices, shape, block_shape)
+
+    @property
+    def nnzb(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        bm, bk = self.block_shape
+        return _ceil_div(self.shape[0], bm), _ceil_div(self.shape[1], bk)
+
+    @property
+    def density(self) -> float:
+        mb, kb = self.grid
+        return self.nnzb / max(1, mb * kb)
+
+    def todense(self) -> jax.Array:
+        mb, kb = self.grid
+        bm, bk = self.block_shape
+        out = jnp.zeros((mb, kb, bm, bk), self.data.dtype)
+        cols = jnp.repeat(
+            jnp.arange(kb), jnp.diff(self.indptr), total_repeat_length=self.nnzb
+        )
+        out = out.at[self.indices, cols].set(self.data)
+        out = out.swapaxes(1, 2).reshape(mb * bm, kb * bk)
+        return out[: self.shape[0], : self.shape[1]]
+
+    def bitmap(self) -> np.ndarray:
+        mb, kb = self.grid
+        bit = np.zeros((mb, kb), dtype=bool)
+        indptr = np.asarray(self.indptr)
+        indices = np.asarray(self.indices)
+        cols = np.repeat(np.arange(kb), np.diff(indptr))
+        bit[indices, cols] = True
+        return bit
+
+
+def dense_to_bcsr(x, block_shape) -> BlockCSR:
+    """Compress a dense matrix to BlockCSR (host-side, concrete values)."""
+    x = np.asarray(x)
+    shape = x.shape
+    blocks = block_partition(x, block_shape)          # (Mb, Kb, bm, bk)
+    occ = (np.abs(blocks) > 0).any(axis=(2, 3))       # (Mb, Kb)
+    rows, cols = np.nonzero(occ)                      # row-major order
+    data = blocks[rows, cols]
+    indptr = np.zeros(occ.shape[0] + 1, dtype=np.int32)
+    np.cumsum(np.bincount(rows, minlength=occ.shape[0]), out=indptr[1:])
+    return BlockCSR(
+        jnp.asarray(data),
+        jnp.asarray(indptr, jnp.int32),
+        jnp.asarray(cols, jnp.int32),
+        shape,
+        tuple(block_shape),
+    )
+
+
+def dense_to_bcsc(x, block_shape) -> BlockCSC:
+    """Compress a dense matrix to BlockCSC (host-side, concrete values)."""
+    x = np.asarray(x)
+    shape = x.shape
+    blocks = block_partition(x, block_shape)
+    occ = (np.abs(blocks) > 0).any(axis=(2, 3))
+    cols_sorted = np.nonzero(occ.T)                   # column-major order
+    cols, rows = cols_sorted
+    data = blocks[rows, cols]
+    indptr = np.zeros(occ.shape[1] + 1, dtype=np.int32)
+    np.cumsum(np.bincount(cols, minlength=occ.shape[1]), out=indptr[1:])
+    return BlockCSC(
+        jnp.asarray(data),
+        jnp.asarray(indptr, jnp.int32),
+        jnp.asarray(rows, jnp.int32),
+        shape,
+        tuple(block_shape),
+    )
+
+
+def random_sparse_dense(
+    rng: np.random.Generator,
+    shape: Tuple[int, int],
+    *,
+    density: float,
+    block_shape: Tuple[int, int] | None = None,
+    dtype=np.float32,
+) -> np.ndarray:
+    """Random dense matrix with target sparsity.
+
+    If ``block_shape`` is given, sparsity is *block structured* (whole blocks
+    zeroed) — the TPU-friendly regime.  Otherwise unstructured element
+    sparsity (the paper's regime; blocks then have partial occupancy).
+    """
+    x = rng.standard_normal(shape).astype(dtype)
+    if block_shape is None:
+        mask = rng.random(shape) < density
+        return np.where(mask, x, 0.0).astype(dtype)
+    bm, bk = block_shape
+    gm, gk = _ceil_div(shape[0], bm), _ceil_div(shape[1], bk)
+    bmask = rng.random((gm, gk)) < density
+    mask = np.kron(bmask, np.ones((bm, bk), dtype=bool))[: shape[0], : shape[1]]
+    return np.where(mask, x, 0.0).astype(dtype)
+
+
+def random_block_sparse(
+    rng: np.random.Generator,
+    shape: Tuple[int, int],
+    *,
+    density: float,
+    block_shape: Tuple[int, int],
+    fmt: str = "bcsr",
+    dtype=np.float32,
+):
+    x = random_sparse_dense(
+        rng, shape, density=density, block_shape=block_shape, dtype=dtype
+    )
+    if fmt == "bcsr":
+        return dense_to_bcsr(x, block_shape)
+    if fmt == "bcsc":
+        return dense_to_bcsc(x, block_shape)
+    raise ValueError(f"unknown fmt {fmt!r}")
+
+
+# ---------------------------------------------------------------------------
+# Scalar CSR / CSC — element granularity, numpy.  Simulator-facing.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CSR:
+    """Paper-exact CSR: data vector, row pointer vector, column index vector."""
+
+    data: np.ndarray      # (nnz,)
+    indptr: np.ndarray    # (M + 1,)
+    indices: np.ndarray   # (nnz,) column coordinate of each element
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.shape[0])
+
+    def fiber(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Return (coords, values) of fiber *i* (row *i*), coordinate-sorted."""
+        lo, hi = self.indptr[i], self.indptr[i + 1]
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def fiber_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def nbytes(self, word_bytes: int = 4) -> int:
+        """Compressed footprint: each element is a (coord, value) word pair.
+
+        The paper's Table 5 uses 32-bit total word size (value + coordinate);
+        ``word_bytes`` is that combined element size.
+        """
+        return self.nnz * word_bytes + self.indptr.size * 4
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.data.dtype)
+        rows = np.repeat(np.arange(self.shape[0]), np.diff(self.indptr))
+        out[rows, self.indices] = self.data
+        return out
+
+    @staticmethod
+    def from_dense(x: np.ndarray) -> "CSR":
+        x = np.asarray(x)
+        rows, cols = np.nonzero(x)
+        indptr = np.zeros(x.shape[0] + 1, dtype=np.int64)
+        np.cumsum(np.bincount(rows, minlength=x.shape[0]), out=indptr[1:])
+        return CSR(x[rows, cols], indptr, cols.astype(np.int64), x.shape)
+
+
+@dataclasses.dataclass
+class CSC:
+    """Paper-exact CSC: data vector, column pointer vector, row index vector."""
+
+    data: np.ndarray
+    indptr: np.ndarray    # (N + 1,)
+    indices: np.ndarray   # (nnz,) row coordinate of each element
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.shape[0])
+
+    def fiber(self, j: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.indptr[j], self.indptr[j + 1]
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def fiber_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def nbytes(self, word_bytes: int = 4) -> int:
+        return self.nnz * word_bytes + self.indptr.size * 4
+
+    def todense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.data.dtype)
+        cols = np.repeat(np.arange(self.shape[1]), np.diff(self.indptr))
+        out[self.indices, cols] = self.data
+        return out
+
+    @staticmethod
+    def from_dense(x: np.ndarray) -> "CSC":
+        x = np.asarray(x)
+        cols_major = np.nonzero(x.T)
+        cols, rows = cols_major
+        indptr = np.zeros(x.shape[1] + 1, dtype=np.int64)
+        np.cumsum(np.bincount(cols, minlength=x.shape[1]), out=indptr[1:])
+        return CSC(x[rows, cols], indptr, rows.astype(np.int64), x.shape)

@@ -1,0 +1,88 @@
+"""Area / power model (paper §5.3, Table 8, Fig. 17).
+
+Component areas and powers are the paper's post-layout numbers (TSMC 28 nm GP
+LVT @ 800 MHz, 64-MS configuration; CACTI 7.0 for the SRAMs).  They enter the
+framework as hardware constants: the *derived* quantities — total area per
+accelerator, the naive-design comparison, and performance/area efficiency
+(Fig. 18) — are computed here from our own simulated cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+__all__ = ["COMPONENT_AREA_MM2", "COMPONENT_POWER_MW", "accelerator_area",
+           "accelerator_power", "naive_design_area", "perf_per_area"]
+
+# Table 8 component breakdown (mm^2 / mW)
+COMPONENT_AREA_MM2: Dict[str, float] = {
+    "dn": 0.04,
+    "mn": 0.07,
+    "rn_fan": 0.17,        # SIGMA-like reduction network
+    "rn_merger": 0.07,     # SpArch-/GAMMA-like merger
+    "rn_mrn": 0.21,        # Flexagon unified MRN (+28% vs FAN, +128% vs merger)
+    "cache": 3.93,         # 1 MiB STR cache
+    "psram_full": 1.03,    # OP-capable psum store (SpArch-like, Flexagon)
+    "psram_gust": 0.51,    # Gust-only psum store (GAMMA-like)
+}
+
+COMPONENT_POWER_MW: Dict[str, float] = {
+    "dn": 2.18,
+    "mn": 3.29,
+    "rn_fan": 248.0,
+    "rn_merger": 64.48,
+    "rn_mrn": 312.0,
+    "cache": 2142.0,
+    "psram_full": 538.0,
+    "psram_gust": 269.0,
+}
+
+_BREAKDOWN = {
+    "sigma_like": ("dn", "mn", "rn_fan", "cache"),
+    "sparch_like": ("dn", "mn", "rn_merger", "cache", "psram_full"),
+    "gamma_like": ("dn", "mn", "rn_merger", "cache", "psram_gust"),
+    "flexagon": ("dn", "mn", "rn_mrn", "cache", "psram_full"),
+}
+
+
+def accelerator_area(name: str) -> float:
+    """Total mm² (Table 8: 4.21 / 5.14 / 4.62 / 5.28)."""
+    return sum(COMPONENT_AREA_MM2[c] for c in _BREAKDOWN[name])
+
+
+def accelerator_power(name: str) -> float:
+    """Total mW (Table 8: 2396 / 2750 / 2481 / 2998)."""
+    return sum(COMPONENT_POWER_MW[c] for c in _BREAKDOWN[name])
+
+
+@dataclasses.dataclass
+class NaiveDesign:
+    """Fig. 17: separate FAN + two mergers sharing MN/DN/SRAM, glued with
+    64×(1:3) demuxes and 3×(64:1) muxes."""
+
+    networks_mm2: float
+    mux_mm2: float
+    base_mm2: float
+
+    @property
+    def total_mm2(self) -> float:
+        return self.base_mm2 + self.networks_mm2 + self.mux_mm2
+
+
+def naive_design_area() -> NaiveDesign:
+    a = COMPONENT_AREA_MM2
+    base = a["dn"] + a["mn"] + a["cache"] + a["psram_full"]
+    networks = a["rn_fan"] + 2 * a["rn_merger"]
+    # Paper: the naive design lands ~25% above Flexagon, almost entirely from
+    # the mux/demux layer (the 3 separate trees themselves are only ~2%).
+    flexagon = accelerator_area("flexagon")
+    mux = 1.25 * flexagon - (base + networks)
+    return NaiveDesign(networks_mm2=networks, mux_mm2=mux, base_mm2=base)
+
+
+def perf_per_area(cycles: float, name: str, ref_cycles: float,
+                  ref_name: str = "sigma_like") -> float:
+    """Fig. 18 metric: speedup (vs reference) / area (normalized)."""
+    speedup = ref_cycles / max(1.0, cycles)
+    area_norm = accelerator_area(name) / accelerator_area(ref_name)
+    return speedup / area_norm

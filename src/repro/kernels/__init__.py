@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the performance hot spots.
+
+- ``ip_spmm`` / ``op_spmm`` / ``gust_spmm`` — the three SpMSpM dataflows on
+  one substrate (``common.py`` = MRN analogue), validated in interpret mode.
+- ``moe_gmm.gmm`` — grouped matmul (Gustavson-as-deployed for MoE).
+- ``ops.flexagon_spmm`` — dataflow-selecting public entry point.
+- ``ref.py`` — pure-jnp oracles.
+"""
+from .ip_spmm import ip_spmm          # noqa: F401
+from .op_spmm import op_spmm, merge_psums  # noqa: F401
+from .gust_spmm import gust_spmm      # noqa: F401
+from .moe_gmm import gmm, pad_groups  # noqa: F401
+from .ops import flexagon_spmm, spmm_with_dataflow  # noqa: F401
+from .ref import spmm_ref, gmm_ref    # noqa: F401

@@ -1,0 +1,154 @@
+"""Outer-Product (KMN) SpMSpM Pallas kernels — two phases, as in the paper.
+
+The paper's OP dataflow (§3.2.2) runs a **streaming phase** that produces psum
+fibers into the PSRAM, then a **merging phase** that merges them row by row
+through the MRN.  The TPU realization keeps both phases:
+
+1. ``_stream_kernel`` — K outermost: every effectual (A column element ×
+   B row element) pair produces one psum block, written to an HBM psum buffer
+   (the PSRAM analogue).  Like the hardware, psums for the same C coordinate
+   but different k iterations coexist, tagged by their position in the work
+   list rather than a k register.
+
+2. ``_merge_kernel`` — the psum stream is consumed in destination-sorted order
+   (the host sort plays the PSRAM's set/tag lookup): the kernel accumulates
+   while the destination coordinate is unchanged and flushes a finished fiber
+   downstream — exactly the MRN comparator/adder discipline, at block
+   granularity (block coordinates are dense, so "compare" degenerates to
+   "same/different"; see DESIGN.md §3).
+
+OP's signature cost — psum traffic to/from memory between the two phases — is
+structurally present: the psum buffer makes a full HBM round trip.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.dataflows import StreamPlan, build_op_plan
+from ..core.formats import BlockCSR, BlockCSC
+from .common import accumulate_or_flush, compiler_params, grid_spec
+
+__all__ = ["op_spmm", "merge_psums"]
+
+
+def _stream_kernel(a_slot_ref, b_slot_ref, a_ref, b_ref, psum_ref):
+    del a_slot_ref, b_slot_ref
+    psum_ref[0] = jnp.dot(a_ref[0], b_ref[0],
+                          preferred_element_type=jnp.float32)
+
+
+def _merge_kernel(run_id_ref, is_first_ref, is_last_ref, psum_ref, o_ref,
+                  acc_ref):
+    del run_id_ref
+    w = pl.program_id(0)
+
+    # MRN node discipline: coordinate changed -> new fiber; match -> add;
+    # fiber complete -> emit the merged output fiber downstream.
+    @pl.when(is_first_ref[w] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += psum_ref[0]
+
+    @pl.when(is_last_ref[w] == 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def merge_psums(psums: jax.Array, ci: np.ndarray, cj: np.ndarray,
+                out_grid: Tuple[int, int], *, out_dtype=jnp.float32,
+                interpret: bool = True) -> jax.Array:
+    """Merging phase: combine a psum block stream by destination coordinate.
+
+    psums: (W, bm, bn) fp32 psum blocks; ci/cj: (W,) destination block coords
+    (host-side).  Returns dense C of shape (Mb*bm, Nb*bn).
+    """
+    w_total, bm, bn = psums.shape
+    mb, nb = out_grid
+    order = np.lexsort((cj, ci))                 # row-by-row, then column
+    ci_s, cj_s = ci[order], cj[order]
+    dest = ci_s.astype(np.int64) * nb + cj_s
+    is_first = np.ones(w_total, dtype=np.int32)
+    is_first[1:] = (dest[1:] != dest[:-1]).astype(np.int32)
+    is_last = np.ones(w_total, dtype=np.int32)
+    is_last[:-1] = (dest[1:] != dest[:-1]).astype(np.int32)
+    run_id = np.cumsum(is_first) - 1             # output fiber index
+    n_runs = int(run_id[-1]) + 1 if w_total else 0
+
+    psums_sorted = psums[jnp.asarray(order)]
+
+    spec = grid_spec(
+        num_scalar_prefetch=3,
+        grid=(w_total,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda w, rid, fst, lst: (w, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda w, rid, fst, lst: (rid[w], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    runs = pl.pallas_call(
+        _merge_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((n_runs, bm, bn), out_dtype),
+        compiler_params=compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(run_id, jnp.int32), jnp.asarray(is_first),
+      jnp.asarray(is_last), psums_sorted)
+
+    # Final output fibers stream to DRAM; place them in the dense C image.
+    run_ci = jnp.asarray(ci_s[is_first == 1], jnp.int32)
+    run_cj = jnp.asarray(cj_s[is_first == 1], jnp.int32)
+    c = jnp.zeros((mb, nb, bm, bn), out_dtype)
+    c = c.at[run_ci, run_cj].set(runs)
+    return c.swapaxes(1, 2).reshape(mb * bm, nb * bn)
+
+
+def op_spmm(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None, *,
+            out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """C = A @ B via the Outer-Product dataflow.  Returns dense C (M, N)."""
+    if plan is None:
+        plan = build_op_plan(a, b)
+    mb = a.grid[0]
+    nb = b.grid[1]
+    bm, bk = a.block_shape
+    bk2, bn = b.block_shape
+    assert bk == bk2
+
+    w_total = int(plan.a_slot.size)
+    if w_total == 0:
+        return jnp.zeros((a.shape[0], b.shape[1]), out_dtype)
+
+    # ---- streaming phase: psum blocks to the PSRAM (HBM buffer) ----------
+    a_slot = jnp.asarray(plan.a_slot, jnp.int32)
+    b_slot = jnp.asarray(plan.b_slot, jnp.int32)
+    spec = grid_spec(
+        num_scalar_prefetch=2,
+        grid=(w_total,),
+        in_specs=[
+            # stationary operand: A column elements (kept across B's fiber)
+            pl.BlockSpec((1, bm, bk), lambda w, sa, sb: (sa[w], 0, 0)),
+            # streamed operand: B row elements for this k iteration
+            pl.BlockSpec((1, bk, bn), lambda w, sa, sb: (sb[w], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda w, sa, sb: (w, 0, 0)),
+    )
+    psums = pl.pallas_call(
+        _stream_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((w_total, bm, bn), jnp.float32),
+        compiler_params=compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(a_slot, b_slot, a.data, b.data)
+
+    # ---- merging phase: row-by-row through the MRN substrate -------------
+    c = merge_psums(psums, plan.ci, plan.cj, (mb, nb),
+                    out_dtype=out_dtype, interpret=interpret)
+    return c[: a.shape[0], : b.shape[1]]

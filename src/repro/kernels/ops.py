@@ -1,0 +1,92 @@
+"""Public jit'd entry points for the Flexagon kernels.
+
+``flexagon_spmm`` is the paper's user-visible feature: one call that runs
+SpMSpM with the best dataflow for the operands — the phase-1 mapper/compiler
+(:mod:`repro.core.selector`) chooses among IP / OP / Gust, then the matching
+kernel (Pallas, TPU) or pure-JAX dataflow reference (CPU / dry-run) executes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import dataflows as df
+from ..core.formats import (
+    BlockCSR, BlockCSC, dense_to_bcsr, dense_to_bcsc, block_occupancy,
+)
+from ..core.selector import LayerShape, TPUSpec, select_dataflow
+from .gust_spmm import gust_spmm
+from .ip_spmm import ip_spmm
+from .op_spmm import op_spmm
+
+__all__ = ["flexagon_spmm", "spmm_with_dataflow"]
+
+Dataflow = Literal["ip_m", "op_m", "gust_m", "ip_n", "op_n", "gust_n", "auto"]
+
+
+def spmm_with_dataflow(a_dense, b_dense, dataflow: str,
+                       block_shape=(128, 128, 128), *,
+                       use_pallas: bool = True, interpret: bool = True,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Run one specific dataflow on dense inputs (compression included).
+
+    N-stationary variants execute through the transpose duality on the Pallas
+    path (C = (Bᵀ Aᵀ)ᵀ), matching the paper's observation that N variants
+    run "in the same manner by exchanging matrices A and B".
+    """
+    bm, bk, bn = block_shape
+    if not use_pallas:
+        out = df.run_dataflow(dataflow, a_dense, b_dense, (bm, bk))
+        return out.astype(out_dtype)
+
+    if dataflow.endswith("_n"):
+        base = dataflow[:-2] + "_m"
+        out = spmm_with_dataflow(
+            np.asarray(b_dense).T, np.asarray(a_dense).T, base,
+            (bn, bk, bm), use_pallas=True, interpret=interpret,
+            out_dtype=out_dtype)
+        return out.T
+
+    if dataflow == "ip_m":
+        a = dense_to_bcsr(a_dense, (bm, bk))
+        b = dense_to_bcsc(b_dense, (bk, bn))
+        return ip_spmm(a, b, out_dtype=out_dtype, interpret=interpret)
+    if dataflow == "op_m":
+        a = dense_to_bcsc(a_dense, (bm, bk))
+        b = dense_to_bcsr(b_dense, (bk, bn))
+        return op_spmm(a, b, out_dtype=out_dtype, interpret=interpret)
+    if dataflow == "gust_m":
+        a = dense_to_bcsr(a_dense, (bm, bk))
+        b = dense_to_bcsr(b_dense, (bk, bn))
+        return gust_spmm(a, b, out_dtype=out_dtype, interpret=interpret)
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def flexagon_spmm(a_dense, b_dense, *, dataflow: Dataflow = "auto",
+                  block_shape=(128, 128, 128), spec: TPUSpec = TPUSpec(),
+                  use_pallas: bool = True, interpret: bool = True,
+                  out_dtype=jnp.float32):
+    """SpMSpM with per-operation dataflow selection (the paper's headline).
+
+    Returns ``(C, chosen_dataflow)``.
+    """
+    a_np = np.asarray(a_dense)
+    b_np = np.asarray(b_dense)
+    if dataflow == "auto":
+        bm, bk, bn = block_shape
+        occ_a = block_occupancy(a_np, (bm, bk))
+        occ_b = block_occupancy(b_np, (bk, bn))
+        shape = LayerShape(
+            m=a_np.shape[0], k=a_np.shape[1], n=b_np.shape[1],
+            density_a=float(occ_a.mean()), density_b=float(occ_b.mean()),
+            block=block_shape,
+        )
+        dataflow = select_dataflow(shape, spec)
+    out = spmm_with_dataflow(a_np, b_np, dataflow, block_shape,
+                             use_pallas=use_pallas, interpret=interpret,
+                             out_dtype=out_dtype)
+    return out, dataflow

@@ -1,0 +1,182 @@
+"""Abstract input specs + step functions for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — and ``build_step``
+returns the function the dry-run lowers:
+
+- ``train_*``   → ``train_step(state, batch)``
+- ``prefill_*`` → ``prefill(params, tokens/frames, cache)``
+- ``decode_*`` / ``long_*`` → ``serve_step(params, cache, tokens)`` — one new
+  token against a KV cache of the shape's seq_len.
+
+The audio/vlm modality frontends are stubs: seamless gets precomputed frame
+embeddings, chameleon gets token ids that already include VQ image tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ShapeSpec, TrainConfig
+from ..models import build_model
+from ..sharding import (abstract_like, batch_sharding, cache_sharding,
+                        params_sharding)
+from ..train import init_train_state, make_train_step
+
+__all__ = ["cell_is_supported", "build_cell", "Cell"]
+
+#: shapes each arch skips, with the reason (recorded in EXPERIMENTS.md)
+SKIPS: Dict[Tuple[str, str], str] = {
+    ("seamless-m4t-large-v2", "long_500k"):
+        "full-attention encoder-decoder speech model; 500k-token decode is "
+        "out of scope for its task (DESIGN.md §6)",
+}
+
+
+def cell_is_supported(arch: str, shape: str) -> Optional[str]:
+    """None if supported, else the skip reason."""
+    return SKIPS.get((arch, shape))
+
+
+#: gradient-accumulation depth for train_4k per arch (activation-memory
+#: knob; larger models need smaller microbatches to fit 16 GiB/chip)
+TRAIN_MICROBATCHES = {
+    "jamba-v0.1-52b": 32,
+    "mixtral-8x7b": 16,
+    "granite-34b": 32,
+    "chameleon-34b": 16,
+    "seamless-m4t-large-v2": 32,
+}
+
+
+# --- §Perf hillclimb variants: (config transform, TrainConfig overrides) ---
+
+def _v_cp(cfg):
+    return dataclasses.replace(cfg, context_parallel=True)
+
+
+def _v_moe(strategy):
+    def f(cfg):
+        if cfg.moe is None:
+            return cfg
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, strategy=strategy))
+    return f
+
+
+VARIANTS = {
+    "baseline": (lambda cfg: cfg, {}),
+    "cp": (_v_cp, {}),                # context-parallel activations
+    "moe_sort": (_v_moe("sort"), {}),
+    "moe_scatter": (_v_moe("scatter"), {}),
+    "bf16_params": (lambda cfg: cfg, {"param_dtype": "bfloat16"}),
+    "remat_dots": (lambda cfg: cfg, {"remat": "dots"}),
+    "bf16_dots": (lambda cfg: cfg, {"param_dtype": "bfloat16",
+                                    "remat": "dots"}),
+    "cp_bf16": (_v_cp, {"param_dtype": "bfloat16"}),
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    fn: Any                     # the function to lower
+    args: Tuple[Any, ...]       # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    static_desc: Dict[str, Any]
+
+
+def _token_batch_struct(cfg, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    batch = {"tokens": tok, "targets": tok}
+    if cfg.frontend == "frames":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, max(1, s // 4), cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _train_cell(cfg, shape: ShapeSpec, mesh, *, microbatches: int,
+                tcfg_over=None) -> Cell:
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len,
+                       microbatches=microbatches, **(tcfg_over or {}))
+    state_struct = jax.eval_shape(
+        lambda key: init_train_state(model, key, tcfg), jax.random.PRNGKey(0))
+    batch_struct = _token_batch_struct(cfg, shape)
+
+    p_shard = params_sharding(state_struct.params, mesh, cfg)
+    state_shard = type(state_struct)(
+        params=p_shard,
+        opt=type(state_struct.opt)(
+            step=batch_sharding(state_struct.opt.step, mesh),
+            m=params_sharding(state_struct.opt.m, mesh, cfg),
+            v=params_sharding(state_struct.opt.v, mesh, cfg),
+        ),
+        ef=None if state_struct.ef is None
+        else params_sharding(state_struct.ef, mesh, cfg),
+    )
+    b_shard = batch_sharding(batch_struct, mesh)
+    step = make_train_step(model, tcfg)
+    return Cell(cfg.name, shape, step, (state_struct, batch_struct),
+                (state_shard, b_shard),
+                {"kind": "train", "microbatches": microbatches,
+                 "donate": (0,)})
+
+
+def _prefill_cell(cfg, shape: ShapeSpec, mesh) -> Cell:
+    model = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_struct = jax.eval_shape(
+        lambda: model.init_cache(b, s), )
+    if cfg.kind == "encdec":
+        inputs = {"frames": jax.ShapeDtypeStruct(
+            (b, max(1, s // 4), cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        fn = lambda p, inp, c: model.prefill(p, inp, c)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        fn = lambda p, tok, c: model.prefill(p, tok, c)
+    return Cell(cfg.name, shape, fn,
+                (params_struct, inputs, cache_struct),
+                (params_sharding(params_struct, mesh, cfg),
+                 batch_sharding(inputs, mesh),
+                 cache_sharding(cache_struct, mesh, cfg)),
+                {"kind": "prefill", "donate": (2,)})
+
+
+def _decode_cell(cfg, shape: ShapeSpec, mesh) -> Cell:
+    model = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_struct = jax.eval_shape(lambda: model.init_cache(b, s))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    fn = lambda p, c, tok: model.decode_step(p, c, tok)
+    return Cell(cfg.name, shape, fn, (params_struct, cache_struct, tokens),
+                (params_sharding(params_struct, mesh, cfg),
+                 cache_sharding(cache_struct, mesh, cfg),
+                 batch_sharding(tokens, mesh)),
+                {"kind": "decode", "donate": (1,)})
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               microbatches: Optional[int] = None,
+               variant: str = "baseline") -> Cell:
+    from ..configs import get_config
+    cfg_fn, tcfg_over = VARIANTS[variant]
+    cfg = cfg_fn(get_config(arch))
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        mb = microbatches or TRAIN_MICROBATCHES.get(arch, 8)
+        return _train_cell(cfg, shape, mesh, microbatches=mb,
+                           tcfg_over=tcfg_over)
+    if shape.kind == "prefill":
+        return _prefill_cell(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return _decode_cell(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,3 @@
+"""Model zoo: composable blocks + the unified LM/EncDec API."""
+from .lm import build_model, LM        # noqa: F401
+from .encdec import EncDec             # noqa: F401

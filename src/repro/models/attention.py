@@ -1,0 +1,249 @@
+"""Attention: GQA/MQA with RoPE, optional QK-norm / QKV bias / sliding window,
+blockwise (flash-style) training attention, and KV-cache decode.
+
+The training/prefill path never materializes the full (S × S) score matrix:
+queries and keys are processed in blocks with a running (max, denominator)
+softmax — the standard IO-aware formulation, in pure JAX so it lowers on any
+backend and SPMD-partitions cleanly (batch → "data", heads → "model").
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import scan_config
+from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init, rope
+from ..sharding.act import shard
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "AttnCache",
+           "init_attn_cache", "blockwise_attention"]
+
+NEG_INF = -1e30
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array          # (B, S_max, Hkv, Dh)
+    v: jax.Array          # (B, S_max, Hkv, Dh)
+
+
+def attn_init(key, cfg):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, hkv * dh, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, hkv * dh, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], hq * dh, d),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(dh)
+        p["knorm"] = rmsnorm_init(dh)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    # measured (EXPERIMENTS §Perf, B3/B4): head-sharded q/k/v wins even under
+    # context-parallel activations — GSPMD reshards seq->heads for the
+    # attention block and back, cheaper than seq-sharded attention's full
+    # K/V exchanges on this fabric model
+    q = shard(dense(p["wq"], x).reshape(b, s, hq, dh),
+              "dp", None, "model", None)
+    k = shard(dense(p["wk"], x).reshape(b, s, hkv, dh),
+              "dp", None, "model", None)
+    v = shard(dense(p["wv"], x).reshape(b, s, hkv, dh),
+              "dp", None, "model", None)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(p["knorm"], k, cfg.norm_eps)
+    cos, sin = rope(positions, dh, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, hkv, dh = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0, block_q: int = 512,
+                        block_k: int = 1024,
+                        gqa_native: bool = False) -> jax.Array:
+    """Flash-style attention in pure JAX.
+
+    q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh) with Hq a multiple of Hkv.
+    ``gqa_native=False`` repeats K/V to Hq heads — measured best under
+    head-TP sharding when Hkv < the model-axis width (EXPERIMENTS §Perf B2:
+    the grouped form halves usable TP ranks for GQA archs and regressed
+    collectives 2×).  ``gqa_native=True`` groups query heads against their
+    kv head without materializing the repeat (the right choice when K/V
+    traffic dominates — used by the decode path).  ``q_offset`` positions
+    the query block inside the key timeline; ``window`` enables sliding-
+    window attention (Mixtral).
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    if not gqa_native and h != hkv:
+        k = _repeat_kv(k, h // hkv)
+        v = _repeat_kv(v, h // hkv)
+        hkv = h
+    n_rep = h // hkv
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    if scan_config.unroll():
+        # cost probes: same matmul flops under any tiling — use big blocks
+        # to keep the unrolled HLO small
+        block_q, block_k = 4096, 8192
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = -(-sq // block_q)
+    nk = -(-sk // block_k)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_k - sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    q = q.reshape(b, nq, block_q, hkv, n_rep, dh)
+    k = k.reshape(b, nk, block_k, hkv, dh)
+    v = v.reshape(b, nk, block_k, hkv, dh)
+    q_pos = q_offset + jnp.arange(nq * block_q).reshape(nq, block_q)
+    k_pos = jnp.arange(nk * block_k).reshape(nk, block_k)
+    k_valid = (jnp.arange(nk * block_k) < sk).reshape(nk, block_k)
+
+    def q_block(qi, qb):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kp, kv_ok = inp
+            # grouped scores: kv head h serves its n_rep query heads (r)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kv_ok[None, None, None, None, :]
+            if causal:
+                mask = mask & (q_pos[qi][None, None, None, :, None]
+                               >= kp[None, None, None, None, :])
+            if window is not None:
+                mask = mask & (q_pos[qi][None, None, None, :, None] - window
+                               < kp[None, None, None, None, :])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhrqk,bkhd->bhrqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, n_rep, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, n_rep, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, n_rep, block_q, dh), jnp.float32)
+        (m, l, acc), _ = scan_config.scan(
+            kv_step, (m0, l0, a0),
+            (k.swapaxes(0, 1), v.swapaxes(0, 1), k_pos, k_valid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, hkv, r, block_q, dh) -> (B, block_q, hkv, r, dh)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    if scan_config.unroll():
+        outs = jnp.stack([q_block(i, q[:, i]) for i in range(nq)])
+    else:
+        outs = jax.lax.map(lambda i: q_block(i, q[:, i]), jnp.arange(nq))
+    out = outs.swapaxes(0, 1).reshape(b, nq * block_q, h, dh)
+    return out[:, :sq].astype(v.dtype)
+
+
+def attn_apply(p, cfg, x, positions, *, window: Optional[int] = None,
+               cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+               causal: bool = True) -> jax.Array:
+    """Training/prefill attention.  x: (B, S, D)."""
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    if cross_kv is not None:
+        # cross-attention: no RoPE on queries, keys come from the memory
+        q = dense(p["wq"], x).reshape(b, s, hq, dh)
+        if cfg.qk_norm:
+            q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k, v = cross_kv
+        causal = False
+    else:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    out = blockwise_attention(q, k, v, causal=causal, window=window)
+    return dense(p["wo"], out.reshape(b, s, hq * dh))
+
+
+def init_attn_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16
+                    ) -> AttnCache:
+    hkv, dh = cfg.kv_heads, cfg.head_dim
+    return AttnCache(
+        k=jnp.zeros((batch, max_seq, hkv, dh), dtype),
+        v=jnp.zeros((batch, max_seq, hkv, dh), dtype),
+    )
+
+
+def attn_prefill(p, cfg, x, positions, cache: AttnCache,
+                 *, window: Optional[int] = None):
+    """Run prefill and write K/V into the cache at [0, S)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    new_cache = AttnCache(
+        k=jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+        v=jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
+    )
+    out = blockwise_attention(q, k, v, causal=True, window=window)
+    return dense(p["wo"], out.reshape(b, s, cfg.n_heads * cfg.head_dim)), \
+        new_cache
+
+
+def attn_decode(p, cfg, x, pos, cache: AttnCache,
+                *, window: Optional[int] = None):
+    """Single-token decode.  x: (B, 1, D); pos: (B,) int32 per-sequence index
+    (per-slot positions enable continuous batching in the serve engine).
+
+    With sliding-window attention the cache is a ring buffer of size
+    ``window`` (constant-size state — what makes mixtral's long_500k cell
+    feasible); otherwise the cache covers the full context.
+    """
+    b = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+
+    s_max = cache.k.shape[1]
+    slot = pos % s_max if window is not None else pos
+    bidx = jnp.arange(b)
+    cache = AttnCache(
+        k=cache.k.at[bidx, slot].set(k[:, 0].astype(cache.k.dtype)),
+        v=cache.v.at[bidx, slot].set(v[:, 0].astype(cache.v.dtype)),
+    )
+
+    # GQA-native decode: scores grouped by kv head — the cache is never
+    # repeated (for MQA that saves an Hq× materialization of the whole cache)
+    n_rep = hq // hkv
+    qg = q.reshape(b, 1, hkv, n_rep, dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, cache.k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    idx = jnp.arange(s_max)
+    pos_b = pos[:, None, None, None, None]
+    if window is not None:
+        # ring buffer: written slots always hold the last min(pos+1, s_max)
+        # tokens, all inside the window by construction
+        valid = idx[None, None, None, None, :] < jnp.minimum(pos_b + 1, s_max)
+    else:
+        valid = idx[None, None, None, None, :] <= pos_b
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(cache.v.dtype),
+                     cache.v)
+    return dense(p["wo"], out.reshape(b, 1, hq * dh)), cache

@@ -1,0 +1,296 @@
+"""Decoder blocks and the scanned layer stack.
+
+Layers are grouped into *segments* (config ``segments()``): a run of layers
+whose signature pattern repeats.  Each segment's parameters are stacked along
+a leading layer axis and executed with ``jax.lax.scan`` (+ ``jax.checkpoint``
+on the body) — one compiled block per distinct sub-layer signature regardless
+of depth, which keeps 88-layer compiles tractable and gives remat-by-layer.
+
+A block is (pre-norm mixer → residual → pre-norm ffn → residual); the rwkv
+signature replaces attention/FFN with time-mix/channel-mix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from . import scan_config
+from .layers import rmsnorm, rmsnorm_init
+from ..sharding.act import shard
+
+__all__ = ["stack_init", "stack_apply", "stack_prefill", "stack_decode",
+           "init_layer_cache"]
+
+Signature = Tuple[str, str]     # (mixer, ffn)
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg, sig: Signature):
+    mixer, ffn = sig
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model),
+                         "norm2": rmsnorm_init(cfg.d_model)}
+    if mixer in ("attn", "swa"):
+        p["mixer"] = attn.attn_init(k1, cfg)
+    elif mixer == "mamba":
+        p["mixer"] = mamba_mod.mamba_init(k1, cfg)
+    elif mixer == "rwkv":
+        p["mixer"] = rwkv_mod.rwkv_init(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if mixer != "rwkv":   # rwkv's channel-mix lives inside its params
+        if ffn == "moe":
+            p["ffn"] = moe_mod.moe_init(k2, cfg)
+        else:
+            p["ffn"] = ffn_mod.ffn_init(k2, cfg)
+    return p
+
+
+def _window(cfg, mixer: str) -> Optional[int]:
+    return cfg.swa_window if mixer == "swa" else None
+
+
+def _block_apply(p, cfg, sig: Signature, x, positions):
+    mixer, ffn = sig
+    seq_axis = "model" if cfg.context_parallel else None
+    x = shard(x, "dp", seq_axis, None)
+    if mixer == "rwkv":
+        h, _, _ = rwkv_mod.rwkv_time_mix(p["mixer"],
+                                         cfg, rmsnorm(p["norm1"], x,
+                                                      cfg.norm_eps))
+        x = x + h
+        h, _ = rwkv_mod.rwkv_channel_mix(p["mixer"], cfg,
+                                         rmsnorm(p["norm2"], x, cfg.norm_eps))
+        return x + h
+    xn = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        h = attn.attn_apply(p["mixer"], cfg, xn, positions,
+                            window=_window(cfg, mixer))
+    else:
+        h = mamba_mod.mamba_apply(p["mixer"], cfg, xn)
+    x = x + h
+    xn = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if ffn == "moe":
+        h = moe_mod.moe_apply(p["ffn"], cfg, xn)
+    else:
+        h = ffn_mod.ffn_apply(p["ffn"], cfg, xn)
+    return x + h
+
+
+def init_layer_cache(cfg, sig: Signature, batch: int, max_seq: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Zeroed per-layer cache for one signature."""
+    mixer, _ = sig
+    if mixer in ("attn", "swa"):
+        size = min(max_seq, cfg.swa_window) if mixer == "swa" else max_seq
+        c = attn.init_attn_cache(cfg, batch, size, dtype)
+        return {"k": c.k, "v": c.v}
+    if mixer == "mamba":
+        c = mamba_mod.init_mamba_cache(cfg, batch)
+        return {"conv": c.conv, "ssm": c.ssm}
+    if mixer == "rwkv":
+        c = rwkv_mod.init_rwkv_cache(cfg, batch)
+        return {"state": c.state, "shift_t": c.shift_t, "shift_c": c.shift_c}
+    raise ValueError(mixer)
+
+
+def _block_prefill(p, cfg, sig: Signature, x, positions, cache):
+    mixer, ffn = sig
+    x = shard(x, "dp", "model" if cfg.context_parallel else None, None)
+    if mixer == "rwkv":
+        xn = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        h, state, last_t = rwkv_mod.rwkv_time_mix(p["mixer"], cfg, xn)
+        x = x + h
+        xn = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h, last_c = rwkv_mod.rwkv_channel_mix(p["mixer"], cfg, xn)
+        new = {"state": state.astype(cache["state"].dtype),
+               "shift_t": last_t.astype(cache["shift_t"].dtype),
+               "shift_c": last_c.astype(cache["shift_c"].dtype)}
+        return x + h, new
+    xn = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        window = _window(cfg, mixer)
+        s = x.shape[1]
+        cache_len = cache["k"].shape[1]
+        q, k, v = attn._project_qkv(p["mixer"], cfg, xn, positions)
+        h = attn.blockwise_attention(q, k, v, causal=True, window=window)
+        h = attn.dense(p["mixer"]["wo"],
+                       h.reshape(x.shape[0], s, cfg.n_heads * cfg.head_dim))
+        # write the last cache_len tokens at slots pos % cache_len
+        kk, vv = k[:, -cache_len:], v[:, -cache_len:]
+        pos_tail = positions[-kk.shape[1]:]
+        slots = pos_tail % cache_len
+        new = {"k": cache["k"].at[:, slots].set(kk.astype(cache["k"].dtype)),
+               "v": cache["v"].at[:, slots].set(vv.astype(cache["v"].dtype))}
+        x = x + h
+    elif mixer == "mamba":
+        # run chunked scan, then recompute terminal state for the cache
+        h = mamba_mod.mamba_apply(p["mixer"], cfg, xn)
+        new = _mamba_terminal_state(p["mixer"], cfg, xn, cache)
+        x = x + h
+    else:
+        raise ValueError(mixer)
+    xn = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    h = (moe_mod.moe_apply(p["ffn"], cfg, xn) if ffn == "moe"
+         else ffn_mod.ffn_apply(p["ffn"], cfg, xn))
+    return x + h, new
+
+
+def _mamba_terminal_state(p, cfg, xn, cache):
+    """Terminal (conv, ssm) state after a prefill pass (for decode handoff)."""
+    xz = mamba_mod.dense(p["in_proj"], xn)
+    x_in, _ = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = mamba_mod._causal_conv(x_in, p["conv_w"], p["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+    _, h = mamba_mod._selective_scan_chunked(p, cfg, x_conv, chunk=256)
+    return {"conv": conv_state.astype(cache["conv"].dtype),
+            "ssm": h.astype(cache["ssm"].dtype)}
+
+
+def _block_decode(p, cfg, sig: Signature, x, pos, cache):
+    mixer, ffn = sig
+    if mixer == "rwkv":
+        c = rwkv_mod.RwkvCache(cache["state"], cache["shift_t"],
+                               cache["shift_c"])
+        xn = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        h, state, last_t = rwkv_mod.rwkv_time_decode(p["mixer"], cfg, xn, c)
+        x = x + h
+        xn = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        h, last_c = rwkv_mod.rwkv_channel_decode(p["mixer"], cfg, xn, c)
+        new = {"state": state.astype(cache["state"].dtype),
+               "shift_t": last_t.astype(cache["shift_t"].dtype),
+               "shift_c": last_c.astype(cache["shift_c"].dtype)}
+        return x + h, new
+    xn = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        c = attn.AttnCache(cache["k"], cache["v"])
+        h, c = attn.attn_decode(p["mixer"], cfg, xn, pos, c,
+                                window=_window(cfg, mixer))
+        new = {"k": c.k, "v": c.v}
+    elif mixer == "mamba":
+        c = mamba_mod.MambaCache(cache["conv"], cache["ssm"])
+        h, c = mamba_mod.mamba_decode(p["mixer"], cfg, xn, c)
+        new = {"conv": c.conv, "ssm": c.ssm}
+    else:
+        raise ValueError(mixer)
+    x = x + h
+    xn = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    h = (moe_mod.moe_apply(p["ffn"], cfg, xn) if ffn == "moe"
+         else ffn_mod.ffn_apply(p["ffn"], cfg, xn))
+    return x + h, new
+
+
+# ---------------------------------------------------------------------------
+# Scanned stack over segments
+# ---------------------------------------------------------------------------
+
+
+def stack_init(key, cfg):
+    """Stacked params: list over segments; each segment is a list over period
+    positions of params stacked to leading dim = repeat count."""
+    segs = cfg.segments()
+    params: List[List[Any]] = []
+    keys = jax.random.split(key, sum(len(period) * count
+                                     for period, count in segs) + 1)
+    ki = 0
+    for period, count in segs:
+        seg_params = []
+        for j, sig in enumerate(period):
+            reps = []
+            for r in range(count):
+                reps.append(_block_init(keys[ki], cfg, sig))
+                ki += 1
+            seg_params.append(
+                jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+        params.append(seg_params)
+    return params
+
+
+def remat_policy(remat):
+    """remat: False | True/"nothing" | "dots" -> checkpoint policy or None."""
+    if remat is False or remat is None:
+        return None
+    if remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _scan_segment(seg_params, cfg, period, x, positions, remat):
+    def body(xc, layer_params):
+        for j, sig in enumerate(period):
+            xc = _block_apply(layer_params[j], cfg, sig, xc, positions)
+        return xc, None
+
+    policy = remat_policy(remat)
+    if policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = scan_config.scan(body, x, seg_params)
+    return x
+
+
+def stack_apply(params, cfg, x, positions, remat=True):
+    for seg_params, (period, _count) in zip(params, cfg.segments()):
+        x = _scan_segment(seg_params, cfg, period, x, positions, remat)
+    return x
+
+
+def stack_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Cache pytree mirroring the stacked layout."""
+    caches = []
+    for period, count in cfg.segments():
+        seg = []
+        for sig in period:
+            one = init_layer_cache(cfg, sig, batch, max_seq, dtype)
+            seg.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy()
+                if count > 1 else a[None], one))
+        caches.append(seg)
+    return caches
+
+
+def stack_prefill(params, cfg, x, positions, caches):
+    new_caches = []
+    for seg_params, seg_cache, (period, _count) in zip(
+            params, caches, cfg.segments()):
+        def body(xc, layer):
+            layer_params, layer_cache = layer
+            new_layer_cache = []
+            for j, sig in enumerate(period):
+                xc, nc = _block_prefill(layer_params[j], cfg, sig, xc,
+                                        positions, layer_cache[j])
+                new_layer_cache.append(nc)
+            return xc, new_layer_cache
+
+        x, seg_new = scan_config.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(seg_new)
+    return x, new_caches
+
+
+def stack_decode(params, cfg, x, pos, caches):
+    new_caches = []
+    for seg_params, seg_cache, (period, _count) in zip(
+            params, caches, cfg.segments()):
+        def body(xc, layer):
+            layer_params, layer_cache = layer
+            new_layer_cache = []
+            for j, sig in enumerate(period):
+                xc, nc = _block_decode(layer_params[j], cfg, sig, xc, pos,
+                                       layer_cache[j])
+                new_layer_cache.append(nc)
+            return xc, new_layer_cache
+
+        x, seg_new = scan_config.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(seg_new)
+    return x, new_caches

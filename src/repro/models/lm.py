@@ -1,0 +1,106 @@
+"""Unified language-model API: init / loss / prefill / decode.
+
+Covers decoder-only archs (dense, MoE, hybrid, SSM, early-fusion VLM — all
+token-frontend) and delegates encoder-decoder (audio) to
+:mod:`repro.models.encdec` behind the same surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import decoder
+from .layers import dense, dense_init, embed_init, embedding_lookup, rmsnorm, \
+    rmsnorm_init
+from ..sharding.act import shard
+
+__all__ = ["build_model", "LM"]
+
+
+def _cross_entropy(logits, targets, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: Any
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": embed_init(k1, cfg.vocab, cfg.d_model),
+            "blocks": decoder.stack_init(k2, cfg),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(k3, cfg.d_model, cfg.vocab)
+        return p
+
+    # -- forward -----------------------------------------------------------
+    def _logits_from_h(self, params, h):
+        h = rmsnorm(params["final_norm"], h, self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(h.dtype)
+            logits = jnp.einsum("...d,vd->...v", h, w)
+        else:
+            logits = dense(params["lm_head"], h)
+        # vocab dim TP-sharded: the softmax/xent reduce over "model"
+        return shard(logits, "dp", None, "model")
+
+    def logits(self, params, tokens, remat: bool = True):
+        cfg = self.cfg
+        x = embedding_lookup(params["embed"], tokens)
+        x = shard(x, "dp", None, None)
+        positions = jnp.arange(tokens.shape[1])
+        x = decoder.stack_apply(params["blocks"], cfg, x, positions,
+                                remat=remat)
+        return self._logits_from_h(params, x)
+
+    def loss(self, params, batch, remat: bool = True):
+        logits = self.logits(params, batch["tokens"], remat=remat)
+        loss = _cross_entropy(logits, batch["targets"],
+                              batch.get("mask"))
+        return loss, {"loss": loss}
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return {"layers": decoder.stack_cache(self.cfg, batch, max_seq, dtype),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(self, params, tokens, cache):
+        cfg = self.cfg
+        x = embedding_lookup(params["embed"], tokens)
+        positions = jnp.arange(tokens.shape[1])
+        x, layers = decoder.stack_prefill(params["blocks"], cfg, x, positions,
+                                          cache["layers"])
+        logits = self._logits_from_h(params, x[:, -1:])
+        pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        return logits, {"layers": layers, "pos": pos}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1) — one new token per sequence."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = embedding_lookup(params["embed"], tokens)
+        x, layers = decoder.stack_decode(params["blocks"], cfg, x, pos,
+                                         cache["layers"])
+        logits = self._logits_from_h(params, x)
+        return logits, {"layers": layers, "pos": pos + 1}
+
+
+def build_model(cfg):
+    if cfg.kind == "encdec":
+        from .encdec import EncDec
+        return EncDec(cfg)
+    return LM(cfg)

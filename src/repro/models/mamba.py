@@ -1,0 +1,179 @@
+"""Mamba (S6) block: selective state-space mixer for the jamba hybrid.
+
+Training path uses a chunked selective scan: ``lax.scan`` over sequence
+chunks (bounded VMEM/HBM working set) with an associative scan inside each
+chunk — the diagonal-A recurrence ``h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t``
+is linear, so the (decay, increment) pairs compose associatively.  Decode is
+the O(1) single-step update over carried (conv, ssm) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import scan_config
+from .layers import dense, dense_init
+from ..sharding.act import shard
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "MambaCache",
+           "init_mamba_cache"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv - 1, d_inner) trailing inputs
+    ssm: jax.Array     # (B, d_inner, d_state)
+
+
+def _dims(cfg):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner),
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_inner)) * 0.1,
+        "conv_b": jnp.zeros((d_inner,)),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, bias=True),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_inner,)),
+        "out_proj": dense_init(ks[4], d_inner, d),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv1d.  x: (B, S, dI); w: (d_conv, dI)."""
+    d_conv = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i: i + x.shape[1], :] * w[i].astype(x.dtype)
+        for i in range(d_conv)
+    )
+    return out + b.astype(x.dtype), xp[:, -(d_conv - 1):, :]
+
+
+def _ssm_params(p, cfg, x_conv):
+    """x_conv: (B, S, dI) -> dt (B,S,dI), B/C (B,S,dS) and A (dI,dS)."""
+    _, dt_rank, d_state, _ = _dims(cfg)
+    proj = dense(p["x_proj"], x_conv, compute_dtype=jnp.float32)
+    dt, b_ssm, c_ssm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt, compute_dtype=jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    return dt, b_ssm, c_ssm, a
+
+
+def _scan_chunk(h0, decay, inc):
+    """Associative scan of h_t = decay_t * h_{t-1} + inc_t within one chunk.
+
+    decay/inc: (B, L, dI, dS); h0: (B, dI, dS).  Returns per-step h and the
+    final carry.
+    """
+
+    def comb(a, b):
+        return (a[0] * b[0], a[1] * b[0] + b[1])
+
+    d_acc, i_acc = jax.lax.associative_scan(comb, (decay, inc), axis=1)
+    h = d_acc * h0[:, None] + i_acc
+    return h, h[:, -1]
+
+
+def _selective_scan_chunked(p, cfg, x_conv, *, chunk: int, h0=None):
+    """Chunked selective scan.  Only per-chunk (B, L, dI, dS) tensors ever
+    materialize: decay/increment are built *inside* the scan body and the
+    per-position output y_t = C_t · h_t is contracted in-body (the fusion the
+    CUDA kernel does — essential for HBM footprint at 32k+ contexts).
+
+    Returns (y: (B, S, dI) fp32, h_final: (B, dI, dS) fp32).
+    """
+    b, s, d_inner = x_conv.shape
+    d_state = cfg.mamba_d_state
+    dt, b_ssm, c_ssm, a = _ssm_params(p, cfg, x_conv)
+    dt = shard(dt, "dp", None, "model")
+    xf = x_conv.astype(jnp.float32)
+
+    if scan_config.unroll():
+        chunk = 4096        # probe: fewer unrolled bodies (flops ~unchanged)
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+
+    def prep(t, fill=0.0):
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+                        constant_values=fill)
+        t = t.reshape((b, n_chunks, chunk) + t.shape[2:])
+        return t.swapaxes(0, 1)                       # (n, B, L, ...)
+
+    xs = (prep(dt), prep(b_ssm), prep(c_ssm), prep(xf))
+
+    def step(h, inp):
+        dtc, bc, cc, xc = inp                         # (B, L, dI)/(B, L, dS)
+        decay = jnp.exp(dtc[..., None] * a[None, None])       # (B,L,dI,dS)
+        inc = (dtc * xc)[..., None] * bc[:, :, None, :]
+        decay = shard(decay, "dp", None, "model", None)
+        inc = shard(inc, "dp", None, "model", None)
+        hs, h_next = _scan_chunk(h, decay, inc)
+        y = jnp.einsum("blds,bls->bld", hs, cc)       # fuse C·h in-body
+        return h_next, shard(y, "dp", None, "model")
+
+    if h0 is None:
+        h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    h_fin, ys = scan_config.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, n_chunks * chunk, d_inner)[:, :s]
+    y = y + xf * p["d_skip"].astype(jnp.float32)
+    return y, h_fin
+
+
+def mamba_apply(p, cfg, x, *, chunk: int = 256) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, "dp", None, "model")
+    z = shard(z, "dp", None, "model")
+    x_conv, _ = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+    y, _ = _selective_scan_chunked(p, cfg, x_conv, chunk=chunk)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return dense(p["out_proj"], y)
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32) -> MambaCache:
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, d_state), dtype),
+    )
+
+
+def mamba_decode(p, cfg, x, cache: MambaCache
+                 ) -> Tuple[jax.Array, MambaCache]:
+    """Single-token step.  x: (B, 1, D)."""
+    b = x.shape[0]
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"],
+                                      init_state=cache.conv)
+    x_conv = jax.nn.silu(x_conv)
+    dt, b_ssm, c_ssm, a = _ssm_params(p, cfg, x_conv)
+    xf = x_conv.astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0, :, None] * a[None])                   # (B,dI,dS)
+    inc = (dt[:, 0] * xf[:, 0])[..., None] * b_ssm[:, 0, None, :]
+    h = decay * cache.ssm + inc
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])[:, None, :]
+    y = y + xf * p["d_skip"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), MambaCache(conv=conv_state, ssm=h)

@@ -1,0 +1,220 @@
+"""Mixture-of-Experts with three selectable dispatch dataflows.
+
+MoE dispatch is SpMSpM (the routing matrix is sparse); the paper's thesis —
+same computation, three loop orders, pick per layer — maps onto three
+executable strategies (DESIGN.md §5):
+
+- ``einsum``  (IP-analogue): capacity-based GShard dispatch via one-hot
+  einsums.  Intersection happens through the dispatch mask; tokens beyond
+  expert capacity drop (full sums only, no merge).  Shards cleanly under
+  GSPMD (tokens → "data", experts → EP, d_ff → "model") — the production
+  distributed path.
+- ``scatter`` (OP-analogue): every expert processes every token (no
+  intersection — maximal partial-product generation), outputs merged by
+  gate-weighted reduction.  Flops scale with E/top_k: profitable only for
+  tiny expert counts / tiny tokens — exactly OP's profile.
+- ``sort``    (Gust-analogue): tokens sorted by expert (leader-follower),
+  contiguous grouped GEMM per expert — dropless; the Pallas ``moe_gmm``
+  kernel is this strategy's TPU hot loop.
+
+``strategy="auto"`` picks per layer shape with a cost model (phase 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+from ..sharding.act import shard
+
+__all__ = ["moe_init", "moe_apply", "select_moe_strategy"]
+
+
+def moe_init(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, scale=scale),
+        "w_gate": jax.random.normal(ks[1], (e, d, f)) * scale,
+        "w_up": jax.random.normal(ks[2], (e, d, f)) * scale,
+        "w_down": jax.random.normal(ks[3], (e, f, d)) * (1.0 / np.sqrt(f)),
+    }
+
+
+def _router(p, x, top_k: int):
+    """x: (T, D) -> (gates (T, k), experts (T, k), probs (T, E))."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts, probs
+
+
+def _expert_ffn(w_gate, w_up, w_down, x):
+    """x: (..., D) with expert-major leading axes on the weights."""
+    g = jax.nn.silu(jnp.einsum("...ed,edf->...ef", x, w_gate))
+    u = jnp.einsum("...ed,edf->...ef", x, w_up)
+    return jnp.einsum("...ef,efd->...ed", g * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# IP-analogue: capacity-based one-hot dispatch (GShard)
+# ---------------------------------------------------------------------------
+
+
+def _moe_einsum(p, cfg, x2d, group_size: int = 4096):
+    """GShard grouped dispatch: tokens are split into groups of
+    ``group_size`` with per-(group, expert) capacity, so the one-hot dispatch
+    tensor is (G, Tg, E, Cg) — linear in T, not quadratic."""
+    t, d = x2d.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    tg = min(group_size, t)
+    g_n = -(-t // tg)
+    pad = g_n * tg - t
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    xg = x2d.reshape(g_n, tg, d)                                 # (G, Tg, D)
+    cap = max(1, min(tg, int(cfg.moe.capacity_factor * tg * k / e)))
+
+    gates, experts, _ = _router(p, x2d.reshape(-1, d), k)
+    gates = gates.reshape(g_n, tg, k)
+    experts = experts.reshape(g_n, tg, k)
+
+    # position of each (token, slot) within its (group, expert) buffer
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.int32)         # (G,Tg,k,E)
+    flat = onehot.reshape(g_n, tg * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g_n, tg, k, e)
+    pos = (pos_in_expert * onehot).sum(-1)                        # (G,Tg,k)
+    keep = pos < cap                                              # drops
+    gates = gates * keep
+
+    # dispatch: scatter each kept (token, slot) into its (expert, capacity)
+    # bucket — unique destinations by construction, so this is the one-hot
+    # dispatch einsum with the zero rows elided (same semantics, O(T·k·D)
+    # memory instead of O(T·E·C))
+    g_idx = jnp.broadcast_to(jnp.arange(g_n)[:, None, None], experts.shape)
+    contrib = xg[:, :, None, :] * keep[..., None].astype(x2d.dtype)
+    safe_pos = jnp.where(keep, pos, 0)
+    expert_in = jnp.zeros((g_n, e, cap, d), x2d.dtype)
+    expert_in = expert_in.at[g_idx, experts, safe_pos].add(contrib)
+
+    # EP stationarity (paper's stationary-operand choice, applied to EP):
+    # tokens-stationary replicates the (small) expert weights over DP and
+    # keeps the big (G,E,C,D) buffers token-local; weights-stationary moves
+    # tokens to expert shards.  Measured on granite-moe train_4k in
+    # EXPERIMENTS §Perf (A3).
+    layout = cfg.moe.ep_layout
+    if layout == "auto":
+        weight_bytes = 3 * e * d * cfg.d_ff * 2
+        dispatch_bytes = 2 * g_n * tg * k * d * 2
+        layout = "tokens" if weight_bytes < dispatch_bytes else "weights"
+    # D carries "model" on the buffers: measured best (A4 refuted the
+    # "Megatron D-replicated" alternative — bigger buffers, no collective
+    # win; GSPMD already fuses the combine-gather resharding)
+    if layout == "tokens":
+        ep_spec = ("dp", None, None, "model")
+    else:
+        ep_spec = (None, "data", None, "model")
+    expert_in = shard(expert_in, *ep_spec)
+    w = lambda name: p[name].astype(x2d.dtype)
+    gg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, w("w_gate")))
+    uu = jnp.einsum("gecd,edf->gecf", expert_in, w("w_up"))
+    expert_out = jnp.einsum("gecf,efd->gecd", gg * uu, w("w_down"))
+    expert_out = shard(expert_out, *ep_spec)
+    # combine: gather each (token, slot)'s expert output, weight by gate
+    # (measured: constraining the gather output regressed collectives 2x —
+    # GSPMD's propagated layout is already the cheap one; EXPERIMENTS §Perf A2)
+    gathered = expert_out[g_idx, experts, safe_pos]               # (G,Tg,k,D)
+    weights = (gates * keep).astype(x2d.dtype)
+    out = jnp.einsum("gskd,gsk->gsd", gathered, weights)
+    return out.reshape(g_n * tg, d)[:t]
+
+
+# ---------------------------------------------------------------------------
+# OP-analogue: dense compute, gate-weighted merge
+# ---------------------------------------------------------------------------
+
+
+def _moe_scatter(p, cfg, x2d):
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    gates, experts, _ = _router(p, x2d, k)
+    w = lambda name: p[name].astype(x2d.dtype)
+    # every (token, expert) partial product — no intersection hardware —
+    # then merge by gate weight (the OP two-phase structure)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", x2d, w("w_gate")))
+    u = jnp.einsum("td,edf->tef", x2d, w("w_up"))
+    outs = jnp.einsum("tef,efd->ted", g * u, w("w_down"))         # (T, E, D)
+    combine = jnp.sum(
+        jax.nn.one_hot(experts, e, dtype=x2d.dtype)
+        * gates[..., None].astype(x2d.dtype), axis=1)             # (T, E)
+    return jnp.einsum("ted,te->td", outs, combine)
+
+
+# ---------------------------------------------------------------------------
+# Gust-analogue: sort by expert + grouped GEMM (dropless)
+# ---------------------------------------------------------------------------
+
+
+def _moe_sort(p, cfg, x2d):
+    t, d = x2d.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    gates, experts, _ = _router(p, x2d, k)
+    flat_expert = experts.reshape(-1)                             # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_expert, stable=True)                 # leader sort
+    sorted_tokens = flat_token[order]
+    xs = x2d[sorted_tokens]                                       # (T*k, D)
+    group_sizes = jnp.bincount(flat_expert, length=e)
+
+    # contiguous grouped GEMM per expert (ragged_dot lowers to the same
+    # schedule as the Pallas moe_gmm kernel; see repro.kernels.moe_gmm)
+    w = lambda name: p[name].astype(x2d.dtype)
+    g = jax.nn.silu(jax.lax.ragged_dot(xs, w("w_gate"), group_sizes))
+    u = jax.lax.ragged_dot(xs, w("w_up"), group_sizes)
+    ys = jax.lax.ragged_dot(g * u, w("w_down"), group_sizes)
+    flat_gates = gates.reshape(-1)[order].astype(x2d.dtype)
+    out = jnp.zeros_like(x2d)
+    out = out.at[sorted_tokens].add(ys * flat_gates[:, None])
+    return out
+
+
+def select_moe_strategy(t: int, d: int, f: int, e: int, k: int) -> str:
+    """Cost-model strategy choice (phase-1 analogue for MoE layers).
+
+    scatter flops ≈ e/k × useful; einsum adds dispatch one-hot matmuls
+    O(T·E·C·D) and risks drops; sort adds O(T·k log T·k) sort + gather but is
+    dropless and flop-minimal.
+    """
+    useful = 6 * t * k * d * f                     # gate+up+down per token
+    scatter_cost = useful * (e / max(1, k))
+    cap = 1.25 * t * k / e
+    einsum_cost = useful + 2 * t * e * cap * d * 2
+    sort_cost = useful * 1.05 + 64 * t * k * np.log2(max(2, t * k))
+    costs = {"scatter": scatter_cost, "einsum": einsum_cost,
+             "sort": sort_cost}
+    return min(costs, key=costs.get)
+
+
+def moe_apply(p, cfg, x, *, strategy: Optional[str] = None):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    strat = strategy or cfg.moe.strategy
+    if strat == "auto":
+        strat = select_moe_strategy(b * s, d, cfg.d_ff,
+                                    cfg.moe.num_experts, cfg.moe.top_k)
+    if strat == "einsum":
+        out = _moe_einsum(p, cfg, x2d)
+    elif strat == "scatter":
+        out = _moe_scatter(p, cfg, x2d)
+    elif strat == "sort":
+        out = _moe_sort(p, cfg, x2d)
+    else:
+        raise ValueError(f"unknown moe strategy {strat!r}")
+    return out.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,212 @@
+"""RWKV-6 ("Finch") block: attention-free mixer with data-dependent decay.
+
+Time-mix recurrence per head (state S ∈ R^{dh×dh}):
+
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    y_t = r_t (diag(u) k_tᵀ v_t + S_{t-1})
+
+with the decay w_t produced *per token* by a LoRA on the shifted input —
+RWKV-6's defining feature (arXiv:2404.05892).  Training runs a chunked
+linear-recurrence: intra-chunk terms via a masked (L×L) attention-like
+product on decay-normalized keys, inter-chunk state carried by ``lax.scan``
+(GLA-style chunking).  Fidelity note (DESIGN.md): token-shift interpolation
+uses static per-channel mixing (RWKV-5 style) rather than the full ddlerp
+LoRA stack; the data-dependent decay is faithful.
+
+Channel-mix is the standard squared-ReLU RWKV FFN.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import scan_config
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+from ..sharding.act import shard
+
+__all__ = ["rwkv_init", "rwkv_time_mix", "rwkv_channel_mix",
+           "rwkv_time_decode", "rwkv_channel_decode", "RwkvCache",
+           "init_rwkv_cache"]
+
+
+class RwkvCache(NamedTuple):
+    state: jax.Array        # (B, H, dh, dh) wkv state
+    shift_t: jax.Array      # (B, D) last input of time-mix
+    shift_c: jax.Array      # (B, D) last input of channel-mix
+
+
+def _heads(cfg):
+    dh = cfg.rwkv_head_dim
+    assert cfg.d_model % dh == 0, (cfg.d_model, dh)
+    return cfg.d_model // dh, dh
+
+
+def rwkv_init(key, cfg):
+    d = cfg.d_model
+    h, dh = _heads(cfg)
+    lora = 64
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d)),     # r,k,v,w,g shift mixes
+        "wr": dense_init(ks[1], d, d),
+        "wk": dense_init(ks[2], d, d),
+        "wv": dense_init(ks[3], d, d),
+        "wg": dense_init(ks[4], d, d),
+        "w0": jnp.zeros((d,)) + math.log(0.3),       # base decay (per channel)
+        "w_lora_a": jax.random.normal(ks[5], (d, lora)) * 0.01,
+        "w_lora_b": jax.random.normal(ks[6], (lora, d)) * 0.01,
+        "u": jax.random.normal(ks[7], (h, dh)) * 0.1,  # "bonus" first-token
+        "wo": dense_init(ks[8], d, d),
+        "ln_x": rmsnorm_init(d),
+        # channel mix
+        "mu_c": jax.random.uniform(ks[9], (2, d)),
+        "ck": dense_init(ks[1], d, cfg.d_ff),
+        "cr": dense_init(ks[2], d, d),
+        "cv": dense_init(ks[3], cfg.d_ff, d),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _time_projections(p, cfg, x, xs):
+    b, s, d = x.shape
+    h, dh = _heads(cfg)
+    mu = p["mu"]
+    r = dense(p["wr"], _mix(x, xs, mu[0])).reshape(b, s, h, dh)
+    k = dense(p["wk"], _mix(x, xs, mu[1])).reshape(b, s, h, dh)
+    v = dense(p["wv"], _mix(x, xs, mu[2])).reshape(b, s, h, dh)
+    g = jax.nn.silu(dense(p["wg"], _mix(x, xs, mu[4])))
+    # data-dependent decay (LoRA), w in (0, 1)
+    xw = _mix(x, xs, mu[3]).astype(jnp.float32)
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + lora))
+    w = w.reshape(b, s, h, dh)
+    sh = lambda t: shard(t, "dp", None, "model", None)
+    return sh(r), sh(k), sh(v), shard(g, "dp", None, "model"), sh(w)
+
+
+def _chunked_wkv(r, k, v, w, u, s0, *, chunk: int = 32):
+    """Chunked linear recurrence.  r/k/v/w: (B, S, H, dh) — w ∈ (0,1).
+
+    Returns y: (B, S, H, dh) and final state (B, H, dh, dh).
+    """
+    b, s, h, dh = r.shape
+    if scan_config.unroll():
+        # probe: larger chunks shrink the unrolled HLO; the intra-chunk
+        # quadratic term grows from ~3% to ~12% of layer flops — recorded
+        chunk = 256
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+
+    def pad_to(x, value=0.0):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=value) if pad else x
+
+    rf = pad_to(r.astype(jnp.float32)).reshape(b, n, chunk, h, dh)
+    kf = pad_to(k.astype(jnp.float32)).reshape(b, n, chunk, h, dh)
+    vf = pad_to(v.astype(jnp.float32)).reshape(b, n, chunk, h, dh)
+    wf = pad_to(w.astype(jnp.float32), 1.0).reshape(b, n, chunk, h, dh)
+
+    uu = u.astype(jnp.float32)
+
+    def chunk_step(state, xs):
+        rc, kc, vc, wc = xs                      # (B, L, H, dh)
+        logw = jnp.log(jnp.maximum(wc, 1e-12))
+        cum = jnp.cumsum(logw, axis=1)           # inclusive prod_{u<=t}
+        p_incl = jnp.exp(cum)
+        p_excl = jnp.exp(cum - logw)             # prod_{u<t}
+        q_hat = rc * p_excl
+        k_hat = kc / jnp.maximum(p_incl, 1e-24)
+        # inter-chunk: state entering the chunk
+        y_inter = jnp.einsum("blhd,bhde->blhe", q_hat, state)
+        # intra-chunk: strictly-causal pairs + bonus diagonal
+        att = jnp.einsum("blhd,bmhd->bhlm", q_hat, k_hat)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        diag = jnp.einsum("blhd,blhd->blh", rc * uu[None, None], kc)
+        y_intra = jnp.einsum("bhlm,bmhe->blhe", att, vc) \
+            + diag[..., None] * vc
+        # state update: decay over the whole chunk + discounted outer sums
+        p_tot = p_incl[:, -1]                    # (B, H, dh)
+        k_contrib = k_hat * p_tot[:, None]
+        state_new = state * p_tot[..., None] \
+            + jnp.einsum("blhd,blhe->bhde", k_contrib, vc)
+        return state_new, y_inter + y_intra
+
+    state, ys = scan_config.scan(
+        chunk_step, s0.astype(jnp.float32),
+        (rf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+         wf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, n * chunk, h, dh)[:, :s]
+    return y, state
+
+
+def rwkv_time_mix(p, cfg, x, *, state=None, last=None):
+    """x: (B, S, D) -> (B, S, D) (+ final state, last token) for caching."""
+    b, s, d = x.shape
+    h, dh = _heads(cfg)
+    xs = _shift(x, last)
+    r, k, v, g, w = _time_projections(p, cfg, x, xs)
+    s0 = state if state is not None else jnp.zeros((b, h, dh, dh))
+    y, s_fin = _chunked_wkv(r, k, v, w, p["u"], s0)
+    y = rmsnorm(p["ln_x"], y.reshape(b, s, d), cfg.norm_eps)
+    out = dense(p["wo"], y.astype(x.dtype) * g)
+    return out, s_fin, x[:, -1]
+
+
+def rwkv_channel_mix(p, cfg, x, *, last=None):
+    xs = _shift(x, last)
+    mu = p["mu_c"]
+    kx = _mix(x, xs, mu[0])
+    rx = _mix(x, xs, mu[1])
+    k = jnp.square(jax.nn.relu(dense(p["ck"], kx)))
+    r = jax.nn.sigmoid(dense(p["cr"], rx))
+    return r * dense(p["cv"], k), x[:, -1]
+
+
+def init_rwkv_cache(cfg, batch: int, dtype=jnp.float32) -> RwkvCache:
+    h, dh = _heads(cfg)
+    return RwkvCache(
+        state=jnp.zeros((batch, h, dh, dh), dtype),
+        shift_t=jnp.zeros((batch, cfg.d_model), dtype),
+        shift_c=jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+def rwkv_time_decode(p, cfg, x, cache: RwkvCache
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token time-mix.  x: (B, 1, D)."""
+    b = x.shape[0]
+    h, dh = _heads(cfg)
+    xs = cache.shift_t[:, None, :].astype(x.dtype)
+    r, k, v, g, w = _time_projections(p, cfg, x, xs)
+    r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    s_prev = cache.state.astype(jnp.float32)
+    kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+    wkv = s_prev + p["u"].astype(jnp.float32)[None, :, :, None] * kv
+    y = jnp.einsum("bhd,bhde->bhe", r1, wkv).reshape(b, 1, -1)
+    state = s_prev * w1[..., None] + kv
+    y = rmsnorm(p["ln_x"], y, cfg.norm_eps)
+    out = dense(p["wo"], y.astype(x.dtype) * g)
+    return out, state, x[:, -1]
+
+
+def rwkv_channel_decode(p, cfg, x, cache: RwkvCache):
+    out, last = rwkv_channel_mix(p, cfg, x, last=cache.shift_c)
+    return out, last

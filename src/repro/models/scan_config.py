@@ -1,0 +1,37 @@
+"""Global scan-unroll switch for cost probing.
+
+XLA's ``cost_analysis`` counts a ``while`` loop body **once**, not
+trip-count times, so FLOPs/bytes of scanned models are undercounted.  The
+roofline cost probes (launch/roofline.py) lower reduced-depth model variants
+with every inner scan unrolled — loop-free HLO whose cost analysis is exact —
+and extrapolate linearly over layers.  Production lowering keeps scans rolled
+(compile time, memory).
+
+Usage:  with scan_config.unrolled(): ... lower ...
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def unroll() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unrolled(on: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = on
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan honoring the unroll switch."""
+    import jax
+    return jax.lax.scan(f, init, xs, length=length, unroll=_UNROLL or 1)

@@ -1,0 +1,106 @@
+"""Compressed sparse-FFN inference — the paper's technique end-to-end in a
+model.
+
+Training keeps block-masked dense weights (`ffn.py`); for serving, this
+module *compresses* the pruned FFN to BCSR/BCSC once (offline, phase-1) and
+runs every matmul through the selected SpMSpM dataflow:
+
+- phase 1: `compress_ffn` — measure block occupancy, pick a dataflow per
+  matmul via the cost-model selector, build the plan (the mapper/compiler);
+- runtime: `sparse_ffn_apply` — executes through the pure-JAX dataflows (or
+  the Pallas kernels on TPU via ``use_pallas``).
+
+The activations-side operand is dense here (weights sparse × activations
+dense), the SpMM special case of SpMSpM — the selector handles it as density
+1.0 on the B operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import dataflows as df
+from ..core.formats import (block_occupancy, dense_to_bcsc, dense_to_bcsr)
+from ..core.selector import LayerShape, TPUSpec, select_dataflow
+from .ffn import _masked_weight
+
+__all__ = ["CompressedFFN", "compress_ffn", "sparse_ffn_apply"]
+
+
+@dataclasses.dataclass
+class CompressedFFN:
+    """One FFN's three matmuls, compressed + planned (phase-1 output)."""
+
+    w_gate: Any           # BlockCSR/BlockCSC of (D, F)
+    w_up: Any
+    w_down: Any           # (F, D)
+    dataflow_in: str      # for x @ w_gate / x @ w_up
+    dataflow_out: str     # for h @ w_down
+    block: int
+
+
+def _compress_one(w_masked: np.ndarray, dataflow: str, block: int):
+    """Table 3 formats: the stationary/streaming roles decide CSR vs CSC of
+    the *weight* operand (we treat the weight as matrix B: x[M,K] @ w[K,N])."""
+    fmt_b = {"ip_m": "bcsc", "op_m": "bcsr", "gust_m": "bcsr",
+             "ip_n": "bcsc", "op_n": "bcsr", "gust_n": "bcsc"}[dataflow]
+    bs = (block, block)
+    return (dense_to_bcsc(w_masked, bs) if fmt_b == "bcsc"
+            else dense_to_bcsr(w_masked, bs))
+
+
+def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
+                 block: int = 128, spec: TPUSpec = TPUSpec()) -> CompressedFFN:
+    """Phase 1 for one pruned FFN layer: occupancy → dataflow → compress."""
+    assert "block_mask" in ffn_params, "FFN is not block-pruned"
+    mask = np.asarray(ffn_params["block_mask"])
+    wg = np.asarray(_masked_weight(ffn_params["w_gate"]["w"],
+                                   ffn_params["block_mask"]))
+    wu = np.asarray(_masked_weight(ffn_params["w_up"]["w"],
+                                   ffn_params["block_mask"]))
+    wd = np.asarray(_masked_weight(ffn_params["w_down"]["w"],
+                                   ffn_params["block_mask"].T))
+    d, f = wg.shape
+
+    density = float(mask.mean())
+    df_in = select_dataflow(LayerShape(
+        m=tokens, k=d, n=f, density_a=1.0, density_b=density,
+        block=(block, block, block)), spec)
+    df_out = select_dataflow(LayerShape(
+        m=tokens, k=f, n=d, density_a=1.0, density_b=density,
+        block=(block, block, block)), spec)
+    return CompressedFFN(
+        w_gate=_compress_one(wg, df_in, block),
+        w_up=_compress_one(wu, df_in, block),
+        w_down=_compress_one(wd, df_out, block),
+        dataflow_in=df_in,
+        dataflow_out=df_out,
+        block=block,
+    )
+
+
+def _spmm(x2d: jax.Array, w_comp, dataflow: str, block: int) -> jax.Array:
+    """x[M,K] @ w[K,N] through the chosen dataflow; the dense activations are
+    compressed on the fly (fully-occupied block structure)."""
+    bs = (block, block)
+    xc = {"ip_m": dense_to_bcsr, "op_m": dense_to_bcsc,
+          "gust_m": dense_to_bcsr, "ip_n": dense_to_bcsr,
+          "op_n": dense_to_bcsc, "gust_n": dense_to_bcsc}[dataflow](
+              np.asarray(x2d, np.float32), bs)
+    fn = {"ip_m": df.ip_m, "op_m": df.op_m, "gust_m": df.gust_m,
+          "ip_n": df.ip_n, "op_n": df.op_n, "gust_n": df.gust_n}[dataflow]
+    return fn(xc, w_comp)
+
+
+def sparse_ffn_apply(comp: CompressedFFN, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D) via the compressed, dataflow-planned FFN."""
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    g = jax.nn.silu(_spmm(x2d, comp.w_gate, comp.dataflow_in, comp.block))
+    u = _spmm(x2d, comp.w_up, comp.dataflow_in, comp.block)
+    y = _spmm((g * u), comp.w_down, comp.dataflow_out, comp.block)
+    return y.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .rules import (  # noqa: F401
+    params_sharding, batch_sharding, cache_sharding, abstract_like,
+)

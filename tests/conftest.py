@@ -1,0 +1,9 @@
+"""Test-session config.
+
+Gives the session a handful of CPU devices so sharding tests exercise real
+multi-device paths — but NOT the dry-run's 512 (smoke tests and benches
+should see a small device count; the dry-run sets its own flag).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

@@ -1,0 +1,61 @@
+"""Data pipeline: determinism, host sharding, resume, prefetch."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import Prefetcher, SyntheticLM, make_batch_iterator
+
+
+def test_deterministic_per_step():
+    src = SyntheticLM(vocab=64, batch=4, seq_len=16, seed=3)
+    a = src.batch_at(7)
+    b = src.batch_at(7)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    c = src.batch_at(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    src = SyntheticLM(vocab=64, batch=2, seq_len=16, seed=0)
+    b = src.batch_at(0)
+    # targets[t] is the next token of an extended stream: verify learnable
+    # structure (mostly affine-mod continuation)
+    nxt = (31 * b["tokens"] + 7) % 64
+    agree = (b["targets"] == nxt).mean()
+    assert agree > 0.8
+
+
+def test_host_sharding_differs():
+    a = SyntheticLM(vocab=64, batch=4, seq_len=8, seed=0, host_id=0,
+                    num_hosts=2).batch_at(0)
+    b = SyntheticLM(vocab=64, batch=4, seq_len=8, seed=0, host_id=1,
+                    num_hosts=2).batch_at(0)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_resume_matches_uninterrupted():
+    cfg = get_config("smollm-360m", smoke=True)
+    tcfg = TrainConfig(global_batch=4, seq_len=8)
+    it = make_batch_iterator(cfg, tcfg, start_step=0)
+    stream = [next(it) for _ in range(6)]
+    it.close()
+    it2 = make_batch_iterator(cfg, tcfg, start_step=3)
+    resumed = [next(it2) for _ in range(3)]
+    it2.close()
+    for a, b in zip(stream[3:], resumed):
+        assert np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_encdec_batches_have_frames():
+    cfg = get_config("seamless-m4t-large-v2", smoke=True)
+    tcfg = TrainConfig(global_batch=2, seq_len=8)
+    it = make_batch_iterator(cfg, tcfg)
+    b = next(it)
+    it.close()
+    assert "frames" in b and b["frames"].shape[0] == 2
+
+
+def test_prefetcher_drains_iterator():
+    pf = Prefetcher(iter(range(5)), depth=2)
+    assert list(pf) == [0, 1, 2, 3, 4]

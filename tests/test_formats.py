@@ -1,0 +1,59 @@
+"""Format roundtrips + invariants (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (CSC, CSR, block_occupancy, dense_to_bcsc,
+                                dense_to_bcsr, random_sparse_dense)
+
+
+@st.composite
+def sparse_matrix(draw, max_dim=48):
+    m = draw(st.integers(1, max_dim))
+    k = draw(st.integers(1, max_dim))
+    density = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    return random_sparse_dense(rng, (m, k), density=density)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sparse_matrix(), st.sampled_from([(4, 4), (8, 4), (5, 7)]))
+def test_bcsr_roundtrip(x, block):
+    b = dense_to_bcsr(x, block)
+    assert np.allclose(np.asarray(b.todense()), x)
+    # fiber structure: indices sorted within each row fiber
+    indptr = np.asarray(b.indptr)
+    indices = np.asarray(b.indices)
+    for i in range(len(indptr) - 1):
+        fiber = indices[indptr[i]: indptr[i + 1]]
+        assert np.all(np.diff(fiber) > 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(sparse_matrix(), st.sampled_from([(4, 4), (8, 8)]))
+def test_bcsc_roundtrip(x, block):
+    b = dense_to_bcsc(x, block)
+    assert np.allclose(np.asarray(b.todense()), x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sparse_matrix())
+def test_scalar_csr_csc_agree(x):
+    csr = CSR.from_dense(x)
+    csc = CSC.from_dense(x)
+    assert csr.nnz == csc.nnz == int((x != 0).sum())
+    assert np.allclose(csr.todense(), x)
+    assert np.allclose(csc.todense(), x)
+    # fibers are coordinate-sorted (the MRN merge precondition)
+    for i in range(x.shape[0]):
+        coords, _ = csr.fiber(i)
+        assert np.all(np.diff(coords) > 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_matrix(), st.sampled_from([(4, 4), (8, 8)]))
+def test_bitmap_matches_occupancy(x, block):
+    b = dense_to_bcsr(x, block)
+    assert np.array_equal(b.bitmap(), block_occupancy(x, block))
+    assert b.nnzb == int(b.bitmap().sum())

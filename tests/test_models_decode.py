@@ -1,0 +1,122 @@
+"""Decode-path consistency: step-by-step decode and prefill+decode must
+reproduce the teacher-forced forward logits for every architecture family.
+
+MoE archs run with all experts selected (removes the discrete routing
+boundary that bf16 noise can flip — a property of MoE, not a bug)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+TOL = 3e-2
+ARCHS = ["smollm-360m", "qwen2-1.5b", "granite-34b", "llama3.2-3b",
+         "chameleon-34b", "rwkv6-3b", "jamba-v0.1-52b", "mixtral-8x7b",
+         "granite-moe-1b-a400m"]
+
+
+def _cfg(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, top_k=cfg.moe.num_experts,
+                                         strategy="scatter"))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = _cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 10
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = np.asarray(model.logits(params, tok, remat=False)
+                      .astype(jnp.float32))
+    scale = np.abs(full).max() + 1e-6
+
+    cache = model.init_cache(B, max_seq=24)
+    outs = []
+    for t in range(S):
+        logits, cache = model.decode_step(params, cache, tok[:, t:t + 1])
+        outs.append(np.asarray(logits.astype(jnp.float32)))
+    dec = np.concatenate(outs, axis=1)
+    assert np.abs(dec - full).max() / scale < TOL
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-3b",
+                                  "jamba-v0.1-52b", "mixtral-8x7b"])
+def test_prefill_then_decode(arch):
+    cfg = _cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, S0 = 2, 10, 6
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = np.asarray(model.logits(params, tok, remat=False)
+                      .astype(jnp.float32))
+    scale = np.abs(full).max() + 1e-6
+
+    cache = model.init_cache(B, max_seq=24)
+    logits_p, cache = model.prefill(params, tok[:, :S0], cache)
+    assert np.abs(np.asarray(logits_p.astype(jnp.float32))[:, 0]
+                  - full[:, S0 - 1]).max() / scale < TOL
+    outs = []
+    for t in range(S0, S):
+        logits, cache = model.decode_step(params, cache, tok[:, t:t + 1])
+        outs.append(np.asarray(logits.astype(jnp.float32)))
+    dec = np.concatenate(outs, axis=1)
+    assert np.abs(dec - full[:, S0:]).max() / scale < TOL
+
+
+def test_encdec_decode_matches_forward():
+    from repro.models.layers import dense, embedding_lookup, rmsnorm
+    cfg = get_config("seamless-m4t-large-v2", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B = 2
+    frames = jax.random.normal(jax.random.PRNGKey(2), (B, 8, cfg.d_model),
+                               jnp.bfloat16)
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, 6), 0, cfg.vocab)
+    mem = model.encode(params, frames, remat=False)
+    x = embedding_lookup(params["embed"], tok)
+    x = model._decoder_pass(params, x, jnp.arange(6), mem, remat=False)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    full = np.asarray(dense(params["lm_head"], x).astype(jnp.float32))
+    scale = np.abs(full).max() + 1e-6
+
+    cache = model.init_cache(B, max_seq=24)
+    logits, cache = model.prefill(
+        params, {"frames": frames, "tokens": tok[:, :1]}, cache)
+    outs = [np.asarray(logits.astype(jnp.float32))]
+    for t in range(1, 6):
+        logits, cache = model.decode_step(params, cache, tok[:, t:t + 1])
+        outs.append(np.asarray(logits.astype(jnp.float32)))
+    dec = np.concatenate(outs, axis=1)
+    assert np.abs(dec - full).max() / scale < TOL
+
+
+def test_swa_ring_buffer_long_context():
+    """SWA decode with a ring cache smaller than the context must match a
+    full-cache reference restricted to the window."""
+    from repro.configs.base import LayerPattern, ModelConfig
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=1, d_head=16, d_ff=64, vocab=64,
+                      pattern=LayerPattern(mixers=("swa",)), swa_window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 20
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full = np.asarray(model.logits(params, tok, remat=False)
+                      .astype(jnp.float32))
+    cache = model.init_cache(B, max_seq=8)       # ring = window
+    outs = []
+    for t in range(S):
+        logits, cache = model.decode_step(params, cache, tok[:, t:t + 1])
+        outs.append(np.asarray(logits.astype(jnp.float32)))
+    dec = np.concatenate(outs, axis=1)
+    err = np.abs(dec - full).max() / (np.abs(full).max() + 1e-6)
+    assert err < TOL, err

@@ -1,0 +1,78 @@
+"""MoE three-dataflow dispatch: equivalence, grouping, selection."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.moe import (_moe_einsum, moe_apply, moe_init,
+                              select_moe_strategy)
+
+
+def make_cfg(e=4, k=2, cf=4.0):
+    return ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                       n_heads=4, d_ff=48, vocab=64,
+                       moe=MoEConfig(num_experts=e, top_k=k,
+                                     capacity_factor=cf))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = make_cfg()
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32), jnp.float32)
+    return cfg, params, x
+
+
+def test_three_strategies_agree(setup):
+    """Same sparse computation, three loop orders, one answer — the paper's
+    central property, at the MoE level."""
+    cfg, params, x = setup
+    outs = {s: np.asarray(moe_apply(params, cfg, x, strategy=s))
+            for s in ("einsum", "scatter", "sort")}
+    for a in outs:
+        for b in outs:
+            np.testing.assert_allclose(outs[a], outs[b], rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 48), st.integers(0, 2 ** 16))
+def test_einsum_group_size_invariance(group, seed):
+    cfg = make_cfg()
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (48, 32), jnp.float32)
+    full = np.asarray(_moe_einsum(params, cfg, x, group_size=48))
+    grouped = np.asarray(_moe_einsum(params, cfg, x, group_size=group))
+    # groups change *capacity boundaries*, not routed math; with generous
+    # capacity no token drops and outputs match exactly
+    np.testing.assert_allclose(full, grouped, rtol=1e-4, atol=1e-4)
+
+
+def test_capacity_drops_tokens():
+    cfg = make_cfg(cf=0.1)            # starve capacity
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32), jnp.float32)
+    dropped = np.asarray(moe_apply(params, cfg, x, strategy="einsum"))
+    kept = np.asarray(moe_apply(params, cfg, x, strategy="sort"))  # dropless
+    # einsum with tiny capacity must diverge from the dropless path
+    assert np.abs(dropped - kept).max() > 1e-3
+
+
+def test_selector_scale_behaviour():
+    # tiny expert counts at small T: dense scatter is competitive;
+    # large T: the flop-minimal sorted grouped GEMM should win
+    big = select_moe_strategy(65536, 4096, 14336, 8, 2)
+    assert big in ("sort", "einsum")
+    tiny = select_moe_strategy(16, 64, 128, 2, 2)
+    assert tiny in ("scatter", "sort", "einsum")
+
+
+def test_router_normalizes_gates(setup):
+    cfg, params, x = setup
+    from repro.models.moe import _router
+    gates, experts, probs = _router(params, x.reshape(-1, 32), cfg.moe.top_k)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert int(np.asarray(experts).max()) < cfg.moe.num_experts

@@ -1,0 +1,62 @@
+"""MRN functional model: one substrate, two modes (reduce + merge)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mrn import merge_fibers, mrn_passes, reduce_clusters
+
+
+@st.composite
+def fiber_set(draw):
+    n_fibers = draw(st.integers(1, 12))
+    fibers = []
+    for _ in range(n_fibers):
+        n = draw(st.integers(0, 10))
+        coords = draw(st.lists(st.integers(0, 30), min_size=n, max_size=n,
+                               unique=True))
+        coords = np.sort(np.asarray(coords, np.int64))
+        vals = np.arange(1.0, len(coords) + 1.0)
+        fibers.append((coords, vals))
+    return fibers
+
+
+@settings(max_examples=50, deadline=None)
+@given(fiber_set(), st.sampled_from([2, 4, 64]))
+def test_merge_semantics(fibers, leaves):
+    """Merged output is coordinate-sorted with duplicates accumulated —
+    independent of tree width (width only changes pass count)."""
+    (coords, vals), stats = merge_fibers(fibers, leaves=leaves)
+    assert np.all(np.diff(coords) > 0)
+    # oracle: dict accumulation
+    ref = {}
+    for c, v in fibers:
+        for ci, vi in zip(c, v):
+            ref[int(ci)] = ref.get(int(ci), 0.0) + float(vi)
+    assert set(map(int, coords)) == set(ref)
+    for c_out, v_out in zip(coords, vals):
+        assert abs(ref[int(c_out)] - v_out) < 1e-9
+    assert stats.elements_in == sum(len(c) for c, _ in fibers)
+    assert stats.elements_out == len(ref)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=1, max_size=10),
+       st.integers(0, 2 ** 16))
+def test_reduce_semantics(sizes, seed):
+    rng = np.random.default_rng(seed)
+    values = rng.standard_normal(sum(sizes))
+    out, stats = reduce_clusters(values, sizes)
+    off = 0
+    for i, sz in enumerate(sizes):
+        assert abs(out[i] - values[off: off + sz].sum()) < 1e-9
+        off += sz
+    assert stats.elements_out == len(sizes)
+
+
+def test_multi_pass_merge():
+    # more fibers than leaves: paper §3.2.2 requires multiple passes
+    fibers = [(np.array([i]), np.array([1.0])) for i in range(100)]
+    (_, vals), stats = merge_fibers(fibers, leaves=64)
+    assert stats.passes >= 2
+    assert mrn_passes(100, 64) >= 2
+    assert mrn_passes(64, 64) == 1
+    assert mrn_passes(1, 64) == 0

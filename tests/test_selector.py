@@ -1,0 +1,58 @@
+"""Dataflow selector (phase-1 mapper) + inter-layer transition legality."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DATAFLOWS, LayerShape, estimate, estimate_all,
+                        plan_network, select_dataflow,
+                        transition_needs_conversion)
+
+
+def test_estimates_positive():
+    ls = LayerShape(512, 512, 512, 0.3, 0.5)
+    for df, est in estimate_all(ls).items():
+        assert est.flops >= 0 and est.total_bytes > 0
+        assert est.time_s > 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64),
+       st.floats(0.01, 1.0), st.floats(0.01, 1.0))
+def test_mn_duality(mb, kb, nb, da, db):
+    """N-stationary estimate == M-stationary estimate of the transpose."""
+    s = LayerShape(mb * 128, kb * 128, nb * 128, da, db)
+    st_ = LayerShape(nb * 128, kb * 128, mb * 128, db, da)
+    for base in ("ip", "op", "gust"):
+        e_n = estimate(s, base + "_n")
+        e_m = estimate(st_, base + "_m")
+        assert abs(e_n.time_s - e_m.time_s) < 1e-12
+
+
+def test_selector_prefers_ip_for_tiny_reused_b():
+    # small B that fits cache + stationary-friendly: IP has no psum traffic
+    s = LayerShape(256, 256, 256, 0.5, 0.5)
+    assert select_dataflow(s) in DATAFLOWS
+
+
+def test_transition_table4():
+    # M-stationary output (CSR) feeds IP(M)/Gust(M)/IP(N) without conversion
+    for prod in ("ip_m", "op_m", "gust_m"):
+        assert not transition_needs_conversion(prod, "ip_m")
+        assert not transition_needs_conversion(prod, "gust_m")
+        assert not transition_needs_conversion(prod, "ip_n")
+        assert transition_needs_conversion(prod, "op_m")
+        assert transition_needs_conversion(prod, "gust_n")
+    for prod in ("ip_n", "op_n", "gust_n"):
+        assert not transition_needs_conversion(prod, "op_m")
+        assert not transition_needs_conversion(prod, "op_n")
+        assert not transition_needs_conversion(prod, "gust_n")
+        assert transition_needs_conversion(prod, "ip_m")
+
+
+def test_plan_network_respects_legality():
+    layers = [LayerShape(512, 512, 2048, 0.7, 0.4) for _ in range(6)]
+    plan = plan_network(layers)
+    assert len(plan) == 6
+    # planner should avoid paying conversions when a legal chain exists
+    convs = sum(transition_needs_conversion(a, b)
+                for a, b in zip(plan, plan[1:]))
+    assert convs == 0

@@ -1,0 +1,86 @@
+"""Cycle-level simulator invariants + paper anchor points."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import (ACCELERATORS, from_layer, simulate,
+                                  simulate_flexagon, accelerator_area,
+                                  accelerator_power, naive_design_area)
+from repro.core.simulator.stats import LayerSpec
+from repro.core.workloads import (MODELS, PAPER_LAYERS, PAPER_LAYER_GROUPS,
+                                  model_layers)
+
+
+@st.composite
+def layer(draw):
+    m = draw(st.integers(8, 128))
+    n = draw(st.integers(8, 256))
+    k = draw(st.integers(8, 128))
+    sp_a = draw(st.floats(0, 95))
+    sp_b = draw(st.floats(0, 95))
+    return LayerSpec("t", m, n, k, sp_a, sp_b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(layer())
+def test_flexagon_is_best_of_three(spec):
+    st_ = from_layer(spec)
+    flex = simulate_flexagon(st_)
+    best = min(simulate(a, st_).cycles
+               for a in ("sigma_like", "sparch_like", "gamma_like"))
+    assert flex.cycles == pytest.approx(best)
+
+
+@settings(max_examples=25, deadline=None)
+@given(layer())
+def test_invariants(spec):
+    st_ = from_layer(spec)
+    # effectual multiplies are dataflow-invariant (paper §2.2)
+    assert st_.mults == int(st_.a_col_nnz @ st_.b_row_nnz)
+    assert int(st_.row_psums.sum()) == st_.mults
+    for a in ACCELERATORS:
+        r = simulate(a, st_)
+        assert r.cycles > 0
+        assert 0.0 <= r.miss_rate <= 1.0
+        assert r.offchip_bytes >= 0
+    # IP generates no psum traffic (full sums only)
+    assert simulate("sigma_like", st_).psram_rw_bytes == 0.0
+
+
+def test_paper_layer_winners():
+    """Fig 13 grouping: 9/9 layers won by their paper-assigned dataflow."""
+    best_map = {"ip": "sigma_like", "op": "sparch_like", "gust": "gamma_like"}
+    for group, names in PAPER_LAYER_GROUPS.items():
+        for name in names:
+            st_ = from_layer(PAPER_LAYERS[name])
+            cyc = {a: simulate(a, st_).cycles
+                   for a in ("sigma_like", "sparch_like", "gamma_like")}
+            assert min(cyc, key=cyc.get) == best_map[group], (name, cyc)
+
+
+def test_v0_miss_rates_match_paper():
+    """Paper Fig 15 anchors: SIGMA 3.13%, SpArch 0.36%, GAMMA 2.30% on V0."""
+    st_ = from_layer(PAPER_LAYERS["V0"])
+    sigma = simulate("sigma_like", st_).miss_rate * 100
+    sparch = simulate("sparch_like", st_).miss_rate * 100
+    gamma = simulate("gamma_like", st_).miss_rate * 100
+    assert abs(sigma - 3.13) < 0.3
+    assert abs(sparch - 0.36) < 0.3
+    assert abs(gamma - 2.30) < 1.0
+
+
+def test_area_table8():
+    assert accelerator_area("sigma_like") == pytest.approx(4.21, abs=0.01)
+    assert accelerator_area("sparch_like") == pytest.approx(5.14, abs=0.01)
+    assert accelerator_area("gamma_like") == pytest.approx(4.62, abs=0.01)
+    assert accelerator_area("flexagon") == pytest.approx(5.28, abs=0.01)
+    assert accelerator_power("flexagon") == pytest.approx(2998, abs=5)
+    naive = naive_design_area()
+    assert naive.total_mm2 / accelerator_area("flexagon") == \
+        pytest.approx(1.25, abs=0.01)
+
+
+def test_model_tables_match_table2():
+    for name, info in MODELS.items():
+        layers = model_layers(name)
+        assert len(layers) == info.nl

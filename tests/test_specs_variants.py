@@ -1,0 +1,49 @@
+"""Launch-layer unit tests: skips, variants, microbatch table (no compiles)."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES
+from repro.launch.specs import (SKIPS, TRAIN_MICROBATCHES, VARIANTS,
+                                cell_is_supported)
+
+
+def test_40_cells_one_declared_skip():
+    cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    assert len(cells) == 40
+    skips = [c for c in cells if cell_is_supported(*c)]
+    assert skips == [("seamless-m4t-large-v2", "long_500k")]
+
+
+def test_variants_are_pure_transforms():
+    base = get_config("mixtral-8x7b")
+    for name, (fn, tcfg_over) in VARIANTS.items():
+        out = fn(base)
+        assert out.n_layers == base.n_layers
+        assert isinstance(tcfg_over, dict)
+    # cp flips only context_parallel
+    cp = VARIANTS["cp"][0](base)
+    assert cp.context_parallel and not base.context_parallel
+    # moe variants touch only the strategy
+    ms = VARIANTS["moe_sort"][0](base)
+    assert ms.moe.strategy == "sort" and base.moe.strategy == "einsum"
+    # moe variants are no-ops for dense archs
+    dense = get_config("llama3.2-3b")
+    assert VARIANTS["moe_sort"][0](dense) == dense
+
+
+def test_train_microbatches_divide_batch():
+    for arch, mb in TRAIN_MICROBATCHES.items():
+        assert SHAPES["train_4k"].global_batch % mb == 0, (arch, mb)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_segments_tile_layers(arch):
+    cfg = get_config(arch)
+    segs = cfg.segments()
+    total = sum(len(period) * count for period, count in segs)
+    assert total == cfg.n_layers
+    # jamba's 1:7 hybrid should compress to one 8-layer period
+    if arch == "jamba-v0.1-52b":
+        assert len(segs) == 1 and len(segs[0][0]) == 8 and segs[0][1] == 4
