@@ -1,9 +1,17 @@
-"""Kernel microbenchmarks: Pallas (interpret) vs pure-JAX dataflow vs oracle.
+"""Kernel microbenchmarks: plan-build vs steady-state apply, per dataflow.
 
-Wall-clock here is CPU interpret-mode time (NOT TPU performance — the roofline
-story lives in EXPERIMENTS.md §Roofline); what this bench establishes is
-correctness at size, plan-build cost, and that the dataflow selector's choice
-agrees with the best measured dataflow on memory-traffic-dominated shapes.
+Wall-clock here is CPU time (NOT TPU performance — the roofline story lives
+in EXPERIMENTS.md §Roofline); what this bench establishes is correctness at
+size and the phase split the plan API exists for:
+
+- ``plan_build`` — one-time phase-1 cost (occupancy, selector, layouts,
+  index plans);
+- ``plan_apply`` — steady-state phase-2 cost, the number that matters for a
+  serving loop (and the ROADMAP perf trajectory);
+- ``legacy_spmm`` — the seed's per-call ``flexagon_spmm``, which pays both
+  on every invocation.
+
+``plan_apply`` must not exceed ``legacy_spmm`` on any shape (asserted).
 """
 from __future__ import annotations
 
@@ -11,8 +19,9 @@ import time
 
 import numpy as np
 
+from repro import flexagon_plan
 from repro.core import LayerShape, estimate_all, random_sparse_dense
-from repro.kernels import spmm_ref, spmm_with_dataflow
+from repro.kernels import flexagon_spmm, spmm_ref, spmm_with_dataflow
 from .common import Row
 
 
@@ -43,6 +52,27 @@ def run() -> list[Row]:
             out = np.asarray(spmm_with_dataflow(a, b, df, bs))
             err = float(np.abs(out - ref).max())
             rows.append(Row(f"kernels/{name}/{df}", us, f"max_err={err:.1e}"))
+
+        # phase split: plan once (build) vs execute many (apply)
+        build_us = _time(lambda: flexagon_plan(a, b, block_shape=bs), reps=3)
+        plan = flexagon_plan(a, b, block_shape=bs)
+        apply_us = _time(lambda: plan.apply(a, b), reps=5)
+        legacy_us = _time(
+            lambda: flexagon_spmm(a, b, block_shape=bs, use_pallas=False)[0],
+            reps=5)
+        err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
+        rows.append(Row(f"kernels/{name}/plan_build", build_us,
+                        f"dataflow={plan.dataflow}"))
+        rows.append(Row(f"kernels/{name}/plan_apply", apply_us,
+                        f"max_err={err:.1e}"))
+        rows.append(Row(f"kernels/{name}/legacy_spmm", legacy_us,
+                        "per-call plan+apply"))
+        # 1.25x headroom so scheduler noise on a loaded box doesn't abort
+        # the whole run; the reported rows carry the actual numbers
+        assert apply_us <= legacy_us * 1.25, (
+            f"{name}: steady-state apply ({apply_us:.0f}us) slower than "
+            f"per-call flexagon_spmm ({legacy_us:.0f}us)")
+
         ests = estimate_all(
             LayerShape(m, k, n, da, db, block=bs))
         sel = min(ests.values(), key=lambda e: e.time_s).dataflow

@@ -3,19 +3,22 @@
 1. Build two sparse matrices, run C = A @ B through all six SpMSpM dataflows
    (pure JAX) and the three Pallas TPU kernels (interpret mode on CPU) —
    everyone agrees with the dense oracle.
-2. Let the phase-1 selector pick a dataflow per layer shape.
+2. Plan once with the phase-1 mapper/compiler (`flexagon_plan`), execute many
+   — including under `jax.jit` — and chain layers with `FlexagonPipeline`.
 3. Reproduce the paper's headline on one Table 6 layer with the cycle-level
    simulator: Flexagon == best of {SIGMA-like, SpArch-like, GAMMA-like}.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import numpy as np
 
+from repro import FlexagonPipeline, SparseOperand, flexagon_plan
 from repro.core import (DATAFLOWS, LayerShape, random_sparse_dense,
                         run_dataflow, select_dataflow)
 from repro.core.simulator import ACCELERATORS, from_layer, simulate
 from repro.core.workloads import PAPER_LAYERS
-from repro.kernels import flexagon_spmm, spmm_ref, spmm_with_dataflow
+from repro.kernels import spmm_ref, spmm_with_dataflow
 
 
 def main():
@@ -34,14 +37,39 @@ def main():
         out = np.asarray(spmm_with_dataflow(a, b, df, (16, 16, 16)))
         print(f"  {df:8s} max|err| = {np.abs(out - oracle).max():.2e}")
 
-    print("== phase-1 selector ==")
-    out, chosen = flexagon_spmm(a, b, block_shape=(16, 16, 16))
-    print(f"  flexagon_spmm picked {chosen!r}, "
-          f"max|err| = {np.abs(np.asarray(out) - oracle).max():.2e}")
+    print("== plan once (phase 1), execute many (phase 2) ==")
+    plan = flexagon_plan(a, b, block_shape=(16, 16, 16))
+    print(f"  selector picked {plan.dataflow!r} "
+          f"(est {plan.estimate.time_s * 1e9:.1f} ns on TPUSpec), "
+          f"output major order {plan.out_major!r}")
+    out = np.asarray(plan.apply(a, b))
+    print(f"  plan.apply          max|err| = {np.abs(out - oracle).max():.2e}")
+    # same pattern, new values — no re-planning, and jit-compatible
+    a2 = a * 3.0
+    out2 = np.asarray(jax.jit(plan.apply)(a2, b))
+    ref2 = np.asarray(spmm_ref(a2, b))
+    print(f"  jit(plan.apply)     max|err| = {np.abs(out2 - ref2).max():.2e}")
+    # operands can be packed once and reused too
+    a_packed = plan.pack_a(a)
+    assert isinstance(a_packed, SparseOperand)
+    print(f"  packed A: {a_packed.fmt.value}, {a_packed.nnzb} blocks "
+          f"(density {a_packed.density:.2f})")
     for name, spec in list(PAPER_LAYERS.items())[:3]:
         shape = LayerShape(spec.m, spec.k, spec.n,
                            spec.density_a, spec.density_b)
         print(f"  layer {name}: selector says {select_dataflow(shape)}")
+
+    print("== plan_network pipeline (Table 4 transitions) ==")
+    w1 = random_sparse_dense(rng, (96, 64), density=0.4, block_shape=(16, 16))
+    w2 = random_sparse_dense(rng, (64, 32), density=0.6, block_shape=(16, 16))
+    pipe = FlexagonPipeline.from_weights([b, w1, w2], tokens=64,
+                                         block_shape=(16, 16, 16))
+    x = rng.standard_normal((64, 64)).astype(np.float32)
+    y = np.asarray(pipe.apply(x))
+    ref = x @ b @ w1 @ w2
+    print(f"  dataflows {pipe.dataflows}, majors {pipe.majors}, "
+          f"{pipe.n_conversions} explicit conversions")
+    print(f"  chain max|err| = {np.abs(y - ref).max():.2e}")
 
     print("== cycle-level simulator (paper layer V0) ==")
     st = from_layer(PAPER_LAYERS["V0"])

@@ -1,0 +1,29 @@
+"""Flexagon reproduction: multi-dataflow SpMSpM for DNN serving on TPU.
+
+Public operator surface (see DESIGN.md for the phase-1/phase-2 contract):
+
+- :func:`flexagon_plan` / :class:`FlexagonPlan` — plan once, execute many;
+- :class:`SparseOperand` / :class:`SparseFormat` — unified format surface;
+- :class:`FlexagonPipeline` — Table 4-legal per-layer plan chains;
+- :class:`PlanCache` — fingerprint-keyed plan reuse for serving loops.
+
+Subpackages: ``core`` (formats/dataflows/selector/simulator), ``kernels``
+(Pallas), ``models``, ``serve``, ``train``, ``launch``.
+"""
+from .api import (  # noqa: F401
+    FlexagonPipeline,
+    FlexagonPlan,
+    PlanCache,
+    SparseFormat,
+    SparseOperand,
+    flexagon_plan,
+)
+
+__all__ = [
+    "FlexagonPipeline",
+    "FlexagonPlan",
+    "PlanCache",
+    "SparseFormat",
+    "SparseOperand",
+    "flexagon_plan",
+]

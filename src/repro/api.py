@@ -1,0 +1,701 @@
+"""Plan-once / execute-many Flexagon operator API.
+
+The paper's architecture has two phases (DESIGN.md §1):
+
+- **phase 1 (offline, host)** — the mapper/compiler inspects one SpMSpM
+  operation's sparsity *pattern*, estimates every dataflow's cost, picks one,
+  and configures the hardware (here: builds compression layouts and padded
+  index plans);
+- **phase 2 (online, device)** — the configured hardware executes, any number
+  of times, on values that share the planned pattern.
+
+The seed API (``flexagon_spmm``) ran both phases on every call.  This module
+makes the split explicit:
+
+- :class:`SparseOperand` — one constructor/conversion surface over the four
+  formats (``BCSR``/``BCSC`` block formats for the TPU path, ``CSR``/``CSC``
+  scalar formats for the simulator), pytree-registered;
+- :func:`flexagon_plan` → :class:`FlexagonPlan` — phase 1 exactly once;
+  ``plan.apply(a, b)`` (or ``plan(a, b)``) is phase 2: pure jnp gathers and
+  the planned executor, jit-compatible, zero host-side plan building;
+- :class:`FlexagonPipeline` — ``plan_network``-backed per-layer plan chain
+  that keeps inter-layer activations in the producer's major order
+  (Table 4 legality; DESIGN.md §4).
+
+``PHASE1_COUNTERS`` counts selector / layout / index-plan constructions so
+tests (and profiles) can assert that execution never re-plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core import dataflows as df
+from .core.formats import (
+    CSC, CSR, BlockCSC, BlockCSR, block_occupancy, dense_to_bcsc,
+    dense_to_bcsr,
+)
+from .core.selector import (
+    DataflowEstimate, LayerShape, TPUSpec, estimate, plan_network,
+    select_dataflow, transition_needs_conversion,
+)
+
+__all__ = [
+    "SparseFormat",
+    "SparseOperand",
+    "FlexagonPlan",
+    "flexagon_plan",
+    "FlexagonPipeline",
+    "PlanCache",
+    "PHASE1_COUNTERS",
+]
+
+#: Phase-1 work counters — bumped ONLY while planning.  ``plan.apply`` must
+#: leave them untouched (asserted by tests/test_api.py).
+PHASE1_COUNTERS = {"selector": 0, "layouts": 0, "index_plans": 0}
+
+
+class SparseFormat(enum.Enum):
+    """The four storage formats behind one constructor surface.
+
+    Block formats feed the dataflow executors / Pallas kernels; scalar
+    formats are the paper-exact fibers consumed by the cycle-level simulator.
+    """
+
+    BCSR = "bcsr"
+    BCSC = "bcsc"
+    CSR = "csr"
+    CSC = "csc"
+
+    @classmethod
+    def of(cls, fmt: Union[str, "SparseFormat"]) -> "SparseFormat":
+        return fmt if isinstance(fmt, cls) else cls(str(fmt).lower())
+
+    @property
+    def is_block(self) -> bool:
+        return self in (SparseFormat.BCSR, SparseFormat.BCSC)
+
+    @property
+    def major(self) -> str:
+        """Fiber major order: rows ("csr") or columns ("csc")."""
+        return "csr" if self in (SparseFormat.BCSR, SparseFormat.CSR) \
+            else "csc"
+
+
+_BLOCK_CLS = {SparseFormat.BCSR: BlockCSR, SparseFormat.BCSC: BlockCSC}
+_SCALAR_CLS = {SparseFormat.CSR: CSR, SparseFormat.CSC: CSC}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseOperand:
+    """A sparse matrix in one of the four formats, as a single pytree.
+
+    ``data``/``indptr``/``indices`` are the leaves; format, logical shape and
+    block shape ride in the treedef — so operands pass through ``jax.jit``,
+    ``jax.tree_util`` and optimizer states like any array.
+    """
+
+    data: Any                       # (nnzb, bm, bk) blocks or (nnz,) scalars
+    indptr: Any
+    indices: Any
+    shape: Tuple[int, int]
+    block_shape: Optional[Tuple[int, int]]   # None for scalar formats
+    fmt: SparseFormat
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return ((self.data, self.indptr, self.indices),
+                (self.fmt, self.shape, self.block_shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, shape, block_shape = aux
+        data, indptr, indices = children
+        return cls(data, indptr, indices, shape, block_shape, fmt)
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_dense(cls, x, format: Union[str, SparseFormat] = SparseFormat.BCSR,
+                   block_shape: Tuple[int, int] = (128, 128)
+                   ) -> "SparseOperand":
+        fmt = SparseFormat.of(format)
+        if fmt.is_block:
+            inner = (dense_to_bcsr if fmt is SparseFormat.BCSR
+                     else dense_to_bcsc)(x, block_shape)
+            return cls(inner.data, inner.indptr, inner.indices,
+                       inner.shape, tuple(block_shape), fmt)
+        inner = _SCALAR_CLS[fmt].from_dense(np.asarray(x))
+        return cls(inner.data, inner.indptr, inner.indices,
+                   inner.shape, None, fmt)
+
+    @classmethod
+    def wrap(cls, inner) -> "SparseOperand":
+        """Adopt an existing BlockCSR/BlockCSC/CSR/CSC."""
+        table = {BlockCSR: SparseFormat.BCSR, BlockCSC: SparseFormat.BCSC,
+                 CSR: SparseFormat.CSR, CSC: SparseFormat.CSC}
+        fmt = table[type(inner)]
+        return cls(inner.data, inner.indptr, inner.indices, inner.shape,
+                   getattr(inner, "block_shape", None)
+                   if fmt.is_block else None, fmt)
+
+    # -- views -----------------------------------------------------------
+    def unwrap(self):
+        """The underlying BlockCSR/BlockCSC/CSR/CSC instance."""
+        if self.fmt.is_block:
+            return _BLOCK_CLS[self.fmt](self.data, self.indptr, self.indices,
+                                        self.shape, self.block_shape)
+        return _SCALAR_CLS[self.fmt](self.data, self.indptr, self.indices,
+                                     self.shape)
+
+    def todense(self):
+        return self.unwrap().todense()
+
+    def convert(self, format: Union[str, SparseFormat],
+                block_shape: Optional[Tuple[int, int]] = None
+                ) -> "SparseOperand":
+        """Re-express in another format (host-side; phase-1 work)."""
+        fmt = SparseFormat.of(format)
+        if fmt == self.fmt and (block_shape is None
+                                or block_shape == self.block_shape):
+            return self
+        bs = block_shape or self.block_shape or (128, 128)
+        return SparseOperand.from_dense(np.asarray(self.todense()),
+                                        format=fmt, block_shape=bs)
+
+    def bitmap(self) -> np.ndarray:
+        """Block occupancy bitmap (block formats only)."""
+        if not self.fmt.is_block:
+            raise ValueError(f"{self.fmt} has no block bitmap")
+        return self.unwrap().bitmap()
+
+    # -- derived sizes ---------------------------------------------------
+    @property
+    def nnzb(self) -> int:
+        """Stored element count (blocks for block formats, scalars else)."""
+        return int(self.data.shape[0])
+
+    nnz = nnzb
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        if not self.fmt.is_block:
+            raise ValueError(f"{self.fmt} has no block grid")
+        return self.unwrap().grid
+
+    @property
+    def density(self) -> float:
+        if self.fmt.is_block:
+            mb, kb = self.grid
+            return self.nnzb / max(1, mb * kb)
+        return self.nnzb / max(1, self.shape[0] * self.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Compression layouts — pattern-frozen dense→compressed gathers
+# ---------------------------------------------------------------------------
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _blockize(x: jax.Array, block_shape: Tuple[int, int]) -> jax.Array:
+    """(M, K) -> (Mb, Kb, bm, bk), traceable (pads with zeros)."""
+    m, k = x.shape
+    bm, bk = block_shape
+    pm, pk = _ceil_div(m, bm) * bm, _ceil_div(k, bk) * bk
+    if (pm, pk) != (m, k):
+        x = jnp.pad(x, ((0, pm - m), (0, pk - k)))
+    return x.reshape(pm // bm, bm, pk // bk, bk).swapaxes(1, 2)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressionLayout:
+    """Frozen block coordinate structure of one operand (phase-1 output).
+
+    ``compress`` turns *new dense values with the planned pattern* into the
+    planned block format using only jnp reshape/gather — safe under jit, no
+    host-side occupancy scan.  Values outside the planned pattern are
+    dropped (the pattern is the plan's contract).
+    """
+
+    rows: np.ndarray        # (nnzb,) block-row coordinate, fiber order
+    cols: np.ndarray        # (nnzb,) block-col coordinate, fiber order
+    indptr: np.ndarray      # (fibers+1,)
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+    fmt: SparseFormat       # BCSR (row-major fibers) or BCSC (col-major)
+
+    def tree_flatten(self):
+        return ((self.rows, self.cols, self.indptr),
+                (self.shape, self.block_shape, self.fmt))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, cols, indptr = children
+        return cls(rows, cols, indptr, *aux)
+
+    @classmethod
+    def from_bitmap(cls, occ: np.ndarray, shape, block_shape,
+                    fmt: SparseFormat) -> "CompressionLayout":
+        PHASE1_COUNTERS["layouts"] += 1
+        if fmt is SparseFormat.BCSR:
+            rows, cols = np.nonzero(occ)                  # row-major order
+            fibers = occ.shape[0]
+            counts = np.bincount(rows, minlength=fibers)
+        else:
+            cols_m, rows_m = np.nonzero(occ.T)            # column-major order
+            rows, cols = rows_m, cols_m
+            fibers = occ.shape[1]
+            counts = np.bincount(cols, minlength=fibers)
+        indptr = np.zeros(fibers + 1, dtype=np.int32)
+        np.cumsum(counts, out=indptr[1:])
+        return cls(rows.astype(np.int32), cols.astype(np.int32), indptr,
+                   tuple(shape), tuple(block_shape), fmt)
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.rows.shape[0])
+
+    def compress(self, x) -> SparseOperand:
+        """Dense values -> planned block format.  jnp only; jit-safe."""
+        x = x if isinstance(x, jnp.ndarray) else jnp.asarray(x)
+        assert x.shape == tuple(self.shape), (x.shape, self.shape)
+        blocks = _blockize(x, self.block_shape)
+        data = blocks[self.rows, self.cols]               # (nnzb, bm, bk)
+        indices = self.cols if self.fmt is SparseFormat.BCSR else self.rows
+        return SparseOperand(data, jnp.asarray(self.indptr, jnp.int32),
+                             jnp.asarray(indices, jnp.int32),
+                             self.shape, self.block_shape, self.fmt)
+
+    def skeleton(self) -> Any:
+        """A pattern-only BlockCSR/BlockCSC (dummy 1×1 data blocks) for the
+        host-side index-plan builders, which read structure only."""
+        dummy = jnp.zeros((self.nnzb, 1, 1), jnp.float32)
+        indices = self.cols if self.fmt is SparseFormat.BCSR else self.rows
+        return _BLOCK_CLS[self.fmt](dummy, jnp.asarray(self.indptr),
+                                    jnp.asarray(indices), self.shape,
+                                    self.block_shape)
+
+
+# ---------------------------------------------------------------------------
+# FlexagonPlan — phase 1 exactly once
+# ---------------------------------------------------------------------------
+
+#: Table 3 operand formats per dataflow: (A format, B format).
+_TABLE3_FORMATS = {
+    "ip_m": (SparseFormat.BCSR, SparseFormat.BCSC),
+    "op_m": (SparseFormat.BCSC, SparseFormat.BCSR),
+    "gust_m": (SparseFormat.BCSR, SparseFormat.BCSR),
+    "ip_n": (SparseFormat.BCSR, SparseFormat.BCSC),
+    "op_n": (SparseFormat.BCSC, SparseFormat.BCSR),
+    "gust_n": (SparseFormat.BCSC, SparseFormat.BCSC),
+}
+
+_EXECUTORS = {
+    "ip_m": df.ip_m, "op_m": df.op_m, "gust_m": df.gust_m,
+    "ip_n": df.ip_n, "op_n": df.op_n, "gust_n": df.gust_n,
+}
+
+OperandSpec = Union[np.ndarray, jax.Array, SparseOperand, Tuple[int, int]]
+
+
+def _pattern_consistent(x: SparseOperand, layout: CompressionLayout) -> bool:
+    """Does this operand's coordinate structure match the planned layout?
+
+    A same-format, same-count operand with *different* coordinates would be
+    multiplied against the wrong partners by the frozen index plan, so it
+    must be re-compressed.  Traced coordinates (inside jit) can't be
+    compared host-side; packed operands carry concrete coordinates, so in
+    practice this check runs — a traced-coordinate operand conservatively
+    falls through to re-compression.
+    """
+    if isinstance(x.indices, jax.core.Tracer) \
+            or isinstance(x.indptr, jax.core.Tracer):
+        return False
+    planned = layout.cols if layout.fmt is SparseFormat.BCSR else layout.rows
+    return (np.array_equal(np.asarray(x.indptr), layout.indptr)
+            and np.array_equal(np.asarray(x.indices), planned))
+
+
+def _pattern_of(spec: OperandSpec, block_shape: Tuple[int, int]
+                ) -> Tuple[Tuple[int, int], np.ndarray]:
+    """(logical shape, block occupancy bitmap) of an operand spec.
+
+    A bare ``(m, k)`` shape tuple means "fully dense pattern" — the SpMM
+    special case (e.g. dense activations) without materializing values.
+    """
+    if isinstance(spec, tuple):
+        m, k = spec
+        grid = (_ceil_div(m, block_shape[0]), _ceil_div(k, block_shape[1]))
+        return (m, k), np.ones(grid, dtype=bool)
+    if isinstance(spec, SparseOperand):
+        if spec.fmt.is_block and tuple(spec.block_shape) == tuple(block_shape):
+            return tuple(spec.shape), spec.bitmap()
+        return (tuple(spec.shape),
+                block_occupancy(np.asarray(spec.todense()), block_shape))
+    x = np.asarray(spec)
+    return x.shape, block_occupancy(x, block_shape)
+
+
+def _fingerprint(occ_a: np.ndarray, occ_b: np.ndarray,
+                 shapes: Tuple[int, int, int],
+                 block_shape: Tuple[int, int, int]) -> str:
+    h = hashlib.sha1()
+    h.update(repr((shapes, block_shape, occ_a.shape, occ_b.shape)).encode())
+    h.update(np.packbits(occ_a).tobytes())
+    h.update(np.packbits(occ_b).tobytes())
+    return h.hexdigest()
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FlexagonPlan:
+    """Everything phase 1 produced for one SpMSpM pattern.
+
+    ``apply(a, b)`` / ``plan(a, b)`` executes with zero host-side plan
+    building: operands (dense arrays or :class:`SparseOperand` in the planned
+    formats) are ingested through frozen gathers and run through the planned
+    executor.  Safe to call under ``jax.jit`` and to reuse across any number
+    of value sets sharing the pattern.
+    """
+
+    dataflow: str
+    a_layout: CompressionLayout
+    b_layout: CompressionLayout
+    index_plan: Any                      # IPPlan | StreamPlan
+    gust_tables: Any                     # GustTables | None (pallas gust)
+    merge_plan: Any                      # MergePlan | None (pallas op)
+    estimate: DataflowEstimate
+    fingerprint: str
+    shapes: Tuple[int, int, int]         # (m, k, n)
+    block_shape: Tuple[int, int, int]
+    use_pallas: bool
+    interpret: bool
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        children = (self.a_layout, self.b_layout, self.index_plan,
+                    self.gust_tables, self.merge_plan)
+        aux = (self.dataflow, dataclasses.astuple(self.estimate),
+               self.fingerprint, self.shapes, self.block_shape,
+               self.use_pallas, self.interpret)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        a_layout, b_layout, index_plan, gust_tables, merge_plan = children
+        dataflow, est, fingerprint, shapes, block_shape, use_pallas, \
+            interpret = aux
+        return cls(dataflow, a_layout, b_layout, index_plan, gust_tables,
+                   merge_plan, DataflowEstimate(*est), fingerprint, shapes,
+                   block_shape, use_pallas, interpret)
+
+    # -- phase-1 byproducts ----------------------------------------------
+    @property
+    def out_major(self) -> str:
+        """Output major order, paper Table 3 (csr for _m, csc for _n)."""
+        return df.OUTPUT_MAJOR[self.dataflow]
+
+    @property
+    def formats(self) -> Tuple[SparseFormat, SparseFormat]:
+        """Planned (A, B) operand formats, paper Table 3."""
+        return _TABLE3_FORMATS[self.dataflow]
+
+    def pack_a(self, a) -> SparseOperand:
+        """Compress A values into the planned format (reusable across calls)."""
+        return self._ingest(a, self.a_layout)
+
+    def pack_b(self, b) -> SparseOperand:
+        return self._ingest(b, self.b_layout)
+
+    def matches(self, a: OperandSpec, b: OperandSpec) -> bool:
+        """Host-side check: do these operands carry the planned pattern?"""
+        (m, k), occ_a = _pattern_of(a, self.block_shape[:2])
+        (k2, n), occ_b = _pattern_of(b, self.block_shape[1:])
+        return _fingerprint(occ_a, occ_b, (m, k, n),
+                            self.block_shape) == self.fingerprint
+
+    # -- phase 2 ---------------------------------------------------------
+    def _ingest(self, x, layout: CompressionLayout) -> SparseOperand:
+        if isinstance(x, SparseOperand):
+            if x.fmt == layout.fmt and x.block_shape == layout.block_shape \
+                    and x.nnzb == layout.nnzb \
+                    and _pattern_consistent(x, layout):
+                return x
+            return layout.compress(x.todense())
+        return layout.compress(x)
+
+    def apply(self, a, b, out_dtype=jnp.float32) -> jax.Array:
+        """Execute C = A @ B on the planned pattern.  jit-compatible."""
+        a_c = self._ingest(a, self.a_layout).unwrap()
+        b_c = self._ingest(b, self.b_layout).unwrap()
+        if not self.use_pallas:
+            out = _EXECUTORS[self.dataflow](a_c, b_c, self.index_plan)
+            return out.astype(out_dtype)
+        return self._apply_pallas(a_c, b_c, out_dtype)
+
+    __call__ = apply
+
+    def _apply_pallas(self, a_c, b_c, out_dtype) -> jax.Array:
+        from .kernels.gust_spmm import gust_spmm
+        from .kernels.ip_spmm import ip_spmm
+        from .kernels.op_spmm import op_spmm
+
+        base = self.dataflow[:-2]
+        if self.dataflow.endswith("_n"):
+            # transpose duality: C = (Bᵀ Aᵀ)ᵀ — the index plan and pallas
+            # aux tables were built for the transposed problem at plan time
+            if base == "ip":
+                at, bt = df._transpose_bcsc_of(a_c), df._transpose_bcsr_of(b_c)
+                return ip_spmm(bt, at, self.index_plan, out_dtype=out_dtype,
+                               interpret=self.interpret).T
+            if base == "op":
+                at, bt = df._transpose_bcsr_of(a_c), df._transpose_bcsc_of(b_c)
+                return op_spmm(bt, at, self.index_plan,
+                               merge=self.merge_plan, out_dtype=out_dtype,
+                               interpret=self.interpret).T
+            at, bt = df._transpose_bcsr_of(a_c), df._transpose_bcsr_of(b_c)
+            return gust_spmm(bt, at, self.gust_tables, out_dtype=out_dtype,
+                             interpret=self.interpret).T
+        if base == "ip":
+            return ip_spmm(a_c, b_c, self.index_plan, out_dtype=out_dtype,
+                           interpret=self.interpret)
+        if base == "op":
+            return op_spmm(a_c, b_c, self.index_plan, merge=self.merge_plan,
+                           out_dtype=out_dtype, interpret=self.interpret)
+        return gust_spmm(a_c, b_c, self.gust_tables, out_dtype=out_dtype,
+                         interpret=self.interpret)
+
+
+def _build_index_plan(dataflow: str, a_layout: CompressionLayout,
+                      b_layout: CompressionLayout):
+    """Padded index plans per Table 3, on pattern-only skeletons.
+
+    N-stationary plans are built for the transposed problem, matching how the
+    executors run them (C = (Bᵀ Aᵀ)ᵀ).
+    """
+    PHASE1_COUNTERS["index_plans"] += 1
+    a_s, b_s = a_layout.skeleton(), b_layout.skeleton()
+    if dataflow == "ip_m":
+        return df.build_ip_plan(a_s, b_s)
+    if dataflow == "op_m":
+        return df.build_op_plan(a_s, b_s)
+    if dataflow == "gust_m":
+        return df.build_gust_plan(a_s, b_s)
+    if dataflow == "ip_n":
+        return df.build_ip_plan(df._transpose_bcsr_of(b_s),
+                                df._transpose_bcsc_of(a_s))
+    if dataflow == "op_n":
+        return df.build_op_plan(df._transpose_bcsc_of(b_s),
+                                df._transpose_bcsr_of(a_s))
+    if dataflow == "gust_n":
+        return df.build_gust_plan(df._transpose_bcsr_of(b_s),
+                                  df._transpose_bcsr_of(a_s))
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def _build_pallas_aux(dataflow: str, index_plan, a_layout, b_layout):
+    """Pattern-only pallas schedules: Gust fiber tables / OP merge plan."""
+    from .kernels.gust_spmm import build_gust_tables
+    from .kernels.op_spmm import build_merge_plan
+
+    base = dataflow[:-2]
+    if base == "gust":
+        if dataflow == "gust_m":
+            a_s, b_s = a_layout.skeleton(), b_layout.skeleton()
+        else:
+            a_s = df._transpose_bcsr_of(b_layout.skeleton())
+            b_s = df._transpose_bcsr_of(a_layout.skeleton())
+        return build_gust_tables(a_s, b_s), None
+    if base == "op":
+        # merged into the transposed grid for op_n (executor transposes back)
+        nb = (b_layout.skeleton().grid[1] if dataflow == "op_m"
+              else a_layout.skeleton().grid[0])
+        return None, build_merge_plan(index_plan.ci, index_plan.cj, nb)
+    return None, None
+
+
+def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
+                  dataflow: str = "auto",
+                  block_shape: Tuple[int, int, int] = (128, 128, 128),
+                  spec: TPUSpec = TPUSpec(),
+                  use_pallas: bool = False,
+                  interpret: bool = True) -> FlexagonPlan:
+    """Phase 1, exactly once: inspect patterns, select, and lay out.
+
+    ``a_spec``/``b_spec`` describe *patterns*: dense arrays (pattern from
+    values), :class:`SparseOperand`, or a bare ``(m, k)`` shape tuple for a
+    fully dense operand.  The returned plan executes any values sharing the
+    pattern — see :meth:`FlexagonPlan.apply`.
+    """
+    bm, bk, bn = block_shape
+    (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
+    (k2, n), occ_b = _pattern_of(b_spec, (bk, bn))
+    if k != k2:
+        raise ValueError(f"inner dims disagree: A is {(m, k)}, B is {(k2, n)}")
+
+    shape = LayerShape(m=m, k=k, n=n,
+                       density_a=float(occ_a.mean()),
+                       density_b=float(occ_b.mean()),
+                       block=block_shape)
+    if dataflow == "auto":
+        PHASE1_COUNTERS["selector"] += 1
+        dataflow = select_dataflow(shape, spec)
+    elif dataflow not in df.DATAFLOWS:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+
+    fmt_a, fmt_b = _TABLE3_FORMATS[dataflow]
+    a_layout = CompressionLayout.from_bitmap(occ_a, (m, k), (bm, bk), fmt_a)
+    b_layout = CompressionLayout.from_bitmap(occ_b, (k, n), (bk, bn), fmt_b)
+    index_plan = _build_index_plan(dataflow, a_layout, b_layout)
+    gust_tables, merge_plan = (None, None)
+    if use_pallas:
+        gust_tables, merge_plan = _build_pallas_aux(
+            dataflow, index_plan, a_layout, b_layout)
+
+    return FlexagonPlan(
+        dataflow=dataflow,
+        a_layout=a_layout,
+        b_layout=b_layout,
+        index_plan=index_plan,
+        gust_tables=gust_tables,
+        merge_plan=merge_plan,
+        estimate=estimate(shape, dataflow, spec),
+        fingerprint=_fingerprint(occ_a, occ_b, (m, k, n), block_shape),
+        shapes=(m, k, n),
+        block_shape=tuple(block_shape),
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# PlanCache — fingerprint-keyed plan reuse (serving loops)
+# ---------------------------------------------------------------------------
+
+
+class PlanCache:
+    """Memoizes :func:`flexagon_plan` by pattern fingerprint.
+
+    Serving loops see the same sparsity patterns over and over (weights are
+    fixed; activation patterns are shape-only); the cache turns repeat
+    phase-1 requests into dictionary hits.
+    """
+
+    def __init__(self, spec: TPUSpec = TPUSpec()):
+        self.spec = spec
+        self._plans: Dict[Tuple, FlexagonPlan] = {}
+        self.hits = 0
+        self.builds = 0
+
+    def get(self, a_spec: OperandSpec, b_spec: OperandSpec, *,
+            dataflow: str = "auto",
+            block_shape: Tuple[int, int, int] = (128, 128, 128),
+            use_pallas: bool = False, interpret: bool = True) -> FlexagonPlan:
+        bm, bk, bn = block_shape
+        (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
+        (_, n), occ_b = _pattern_of(b_spec, (bk, bn))
+        key = (_fingerprint(occ_a, occ_b, (m, k, n), tuple(block_shape)),
+               dataflow, use_pallas, interpret)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = flexagon_plan(a_spec, b_spec, dataflow=dataflow,
+                                 block_shape=block_shape, spec=self.spec,
+                                 use_pallas=use_pallas, interpret=interpret)
+            self._plans[key] = plan
+            self.builds += 1
+        else:
+            self.hits += 1
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# FlexagonPipeline — plan_network over a layer chain (Table 4)
+# ---------------------------------------------------------------------------
+
+
+class FlexagonPipeline:
+    """Per-layer plans chained through Table 4 format-transition legality.
+
+    Phase 1 runs :func:`repro.core.selector.plan_network` over the whole
+    chain (a DP that charges explicit conversions), then builds one
+    :class:`FlexagonPlan` per layer with the planned dataflow.  ``apply(x)``
+    runs the chain jit-compatibly; activations between layers keep the
+    producer's major order — consumers whose Table 4 transition is legal
+    ingest it directly through their frozen layout, and only ``EC`` cells
+    (counted in ``n_conversions``) imply a reorder.
+    """
+
+    def __init__(self, plans: List[FlexagonPlan],
+                 weights: List[SparseOperand], dataflows: List[str],
+                 conversions: List[bool]):
+        self.plans = plans
+        self.weights = weights
+        self.dataflows = dataflows
+        self.conversions = conversions
+
+    @classmethod
+    def from_weights(cls, weights: Sequence[Any], *, tokens: int,
+                     block_shape: Tuple[int, int, int] = (128, 128, 128),
+                     spec: TPUSpec = TPUSpec(),
+                     dataflows: Optional[Sequence[str]] = None,
+                     use_pallas: bool = False,
+                     interpret: bool = True) -> "FlexagonPipeline":
+        """Plan a chain ``x → x@W1 → (x@W1)@W2 → …`` (phase 1 once).
+
+        ``weights`` are dense arrays or :class:`SparseOperand`; layer i's K
+        dim must equal layer i-1's N dim.
+        """
+        bm, bk, bn = block_shape
+        shapes = []
+        for i, w in enumerate(weights):
+            (kw, nw), occ = _pattern_of(w, (bk, bn))
+            if i > 0 and kw != shapes[-1].n:
+                raise ValueError(
+                    f"layer {i}: K={kw} != previous layer N={shapes[-1].n}")
+            shapes.append(LayerShape(m=tokens, k=kw, n=nw, density_a=1.0,
+                                     density_b=float(occ.mean()),
+                                     block=block_shape))
+        if dataflows is None:
+            PHASE1_COUNTERS["selector"] += 1
+            dataflows = plan_network(shapes, spec)
+        dataflows = list(dataflows)
+
+        plans, packed = [], []
+        for i, (w, s, d) in enumerate(zip(weights, shapes, dataflows)):
+            plan = flexagon_plan((tokens, s.k), w, dataflow=d,
+                                 block_shape=block_shape, spec=spec,
+                                 use_pallas=use_pallas, interpret=interpret)
+            plans.append(plan)
+            packed.append(plan.pack_b(w))
+        conversions = [False] + [
+            transition_needs_conversion(dataflows[i - 1], dataflows[i])
+            for i in range(1, len(dataflows))]
+        return cls(plans, packed, dataflows, conversions)
+
+    @property
+    def n_conversions(self) -> int:
+        """Explicit conversions (Table 4 "EC" cells) along the chain."""
+        return sum(self.conversions)
+
+    @property
+    def majors(self) -> List[str]:
+        """Activation major order after each layer (Table 3)."""
+        return [p.out_major for p in self.plans]
+
+    def apply(self, x) -> jax.Array:
+        """Run all layers; jit-compatible, zero host-side plan work."""
+        for plan, w in zip(self.plans, self.weights):
+            x = plan.apply(x, w)
+        return x
+
+    __call__ = apply

@@ -72,6 +72,7 @@ OUTPUT_MAJOR = {
 # ---------------------------------------------------------------------------
 
 
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class IPPlan:
     """Per-C-block intersection lists, padded to the max intersection length.
@@ -85,7 +86,15 @@ class IPPlan:
     npairs: np.ndarray
     max_pairs: int
 
+    def tree_flatten(self):
+        return (self.pair_a, self.pair_b, self.npairs), (self.max_pairs,)
 
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class StreamPlan:
     """Flat (a_slot, b_slot, ci, cj) work list for OP/Gust dataflows.
@@ -101,6 +110,14 @@ class StreamPlan:
     cj: np.ndarray
     seg_ptr: np.ndarray   # (outer+1,) segment boundaries in the flat list
     order: str            # "k" (OP) or "i" (Gust)
+
+    def tree_flatten(self):
+        return ((self.a_slot, self.b_slot, self.ci, self.cj, self.seg_ptr),
+                (self.order,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
 
 
 def build_ip_plan(a: BlockCSR, b: BlockCSC) -> IPPlan:
@@ -331,10 +348,19 @@ def gust_n(a: BlockCSC, b: BlockCSC, plan: StreamPlan | None = None) -> jax.Arra
 
 
 def run_dataflow(name: str, a_dense, b_dense,
-                 block_shape: Tuple[int, int] = (8, 8)) -> jax.Array:
-    """Compress operands per Table 3 for ``name`` and execute it."""
-    bs = block_shape
-    bs_b = (block_shape[1], block_shape[1])
+                 block_shape: Tuple[int, ...] = (8, 8)) -> jax.Array:
+    """Compress operands per Table 3 for ``name`` and execute it.
+
+    ``block_shape`` is ``(bm, bk, bn)``; the legacy 2-tuple ``(bm, bk)`` is
+    accepted with ``bn = bk`` (B blocks are then ``(bk, bk)``).
+    """
+    if len(block_shape) == 2:
+        bm, bk = block_shape
+        bn = bk
+    else:
+        bm, bk, bn = block_shape
+    bs = (bm, bk)
+    bs_b = (bk, bn)
     if name == "ip_m":
         return ip_m(dense_to_bcsr(a_dense, bs), dense_to_bcsc(b_dense, bs_b))
     if name == "op_m":

@@ -3,12 +3,14 @@
 - ``ip_spmm`` / ``op_spmm`` / ``gust_spmm`` — the three SpMSpM dataflows on
   one substrate (``common.py`` = MRN analogue), validated in interpret mode.
 - ``moe_gmm.gmm`` — grouped matmul (Gustavson-as-deployed for MoE).
-- ``ops.flexagon_spmm`` — dataflow-selecting public entry point.
+- ``ops.flexagon_spmm`` — one-shot convenience shim; the plan-once entry
+  point is :func:`repro.api.flexagon_plan` (phase-1 schedules for these
+  kernels — ``GustTables``, ``MergePlan`` — are built there once).
 - ``ref.py`` — pure-jnp oracles.
 """
 from .ip_spmm import ip_spmm          # noqa: F401
-from .op_spmm import op_spmm, merge_psums  # noqa: F401
-from .gust_spmm import gust_spmm      # noqa: F401
+from .op_spmm import op_spmm, merge_psums, MergePlan, build_merge_plan  # noqa: F401
+from .gust_spmm import gust_spmm, GustTables, build_gust_tables  # noqa: F401
 from .moe_gmm import gmm, pad_groups  # noqa: F401
 from .ops import flexagon_spmm, spmm_with_dataflow  # noqa: F401
 from .ref import spmm_ref, gmm_ref    # noqa: F401

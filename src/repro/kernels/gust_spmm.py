@@ -27,10 +27,72 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import dataclasses
+
 from ..core.formats import BlockCSR
 from .common import compiler_params, grid_spec
 
-__all__ = ["gust_spmm"]
+__all__ = ["gust_spmm", "GustTables", "build_gust_tables"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GustTables:
+    """Padded-rectangular fiber tables for scalar prefetch (phase-1 output).
+
+    Depends only on the operands' sparsity *patterns*, so a plan can build it
+    once and reuse it for every execution with the same structure.
+    """
+
+    a_slots: np.ndarray   # (Mb*amax,)
+    a_cols: np.ndarray
+    a_len: np.ndarray     # (Mb,)
+    b_slots: np.ndarray   # (Kb*fmax,)
+    b_cols: np.ndarray
+    b_len: np.ndarray     # (Kb,)
+    amax: int
+    fmax: int
+
+    def tree_flatten(self):
+        return ((self.a_slots, self.a_cols, self.a_len,
+                 self.b_slots, self.b_cols, self.b_len),
+                (self.amax, self.fmax))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def build_gust_tables(a: BlockCSR, b: BlockCSR) -> GustTables:
+    """Host-side fiber-table construction for the Gust kernel (plan time)."""
+    mb, kb = a.grid
+    a_indptr = np.asarray(a.indptr)
+    a_indices = np.asarray(a.indices)
+    b_indptr = np.asarray(b.indptr)
+    b_indices = np.asarray(b.indices)
+
+    a_len = np.diff(a_indptr).astype(np.int32)            # (Mb,)
+    b_len = np.diff(b_indptr).astype(np.int32)            # (Kb,)
+    amax = max(1, int(a_len.max())) if a_len.size else 1
+    fmax = max(1, int(b_len.max())) if b_len.size else 1
+
+    # Fiber tables, padded rectangular for scalar prefetch.  Padded entries
+    # point at slot 0 (a real block) and are masked out by the length gates.
+    a_slots = np.zeros((mb, amax), np.int32)
+    a_cols = np.zeros((mb, amax), np.int32)
+    for i in range(mb):
+        lo, hi = a_indptr[i], a_indptr[i + 1]
+        a_slots[i, : hi - lo] = np.arange(lo, hi)
+        a_cols[i, : hi - lo] = a_indices[lo:hi]
+    b_slots = np.zeros((kb, fmax), np.int32)
+    b_cols = np.zeros((kb, fmax), np.int32)
+    for k in range(kb):
+        lo, hi = b_indptr[k], b_indptr[k + 1]
+        b_slots[k, : hi - lo] = np.arange(lo, hi)
+        b_cols[k, : hi - lo] = b_indices[lo:hi]
+    return GustTables(a_slots.reshape(-1), a_cols.reshape(-1), a_len,
+                      b_slots.reshape(-1), b_cols.reshape(-1), b_len,
+                      amax, fmax)
 
 
 def _kernel(a_slots_ref, a_cols_ref, a_len_ref, b_slots_ref, b_cols_ref,
@@ -58,9 +120,13 @@ def _kernel(a_slots_ref, a_cols_ref, a_len_ref, b_slots_ref, b_cols_ref,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def gust_spmm(a: BlockCSR, b: BlockCSR, *, out_dtype=jnp.float32,
-              interpret: bool = True) -> jax.Array:
-    """C = A @ B via Gustavson's dataflow.  Returns dense C (M, N)."""
+def gust_spmm(a: BlockCSR, b: BlockCSR, tables: GustTables | None = None, *,
+              out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """C = A @ B via Gustavson's dataflow.  Returns dense C (M, N).
+
+    ``tables`` (from :func:`build_gust_tables`) carries the phase-1 fiber
+    tables; omitted, they are rebuilt host-side from the operand structure.
+    """
     mb, kb = a.grid
     kb2, nb = b.grid
     assert kb == kb2
@@ -71,30 +137,9 @@ def gust_spmm(a: BlockCSR, b: BlockCSR, *, out_dtype=jnp.float32,
     if a.nnzb == 0 or b.nnzb == 0:
         return jnp.zeros((a.shape[0], b.shape[1]), out_dtype)
 
-    a_indptr = np.asarray(a.indptr)
-    a_indices = np.asarray(a.indices)
-    b_indptr = np.asarray(b.indptr)
-    b_indices = np.asarray(b.indices)
-
-    a_len = np.diff(a_indptr).astype(np.int32)            # (Mb,)
-    b_len = np.diff(b_indptr).astype(np.int32)            # (Kb,)
-    amax = max(1, int(a_len.max()))
-    fmax = max(1, int(b_len.max()))
-
-    # Fiber tables, padded rectangular for scalar prefetch.  Padded entries
-    # point at slot 0 (a real block) and are masked out by the length gates.
-    a_slots = np.zeros((mb, amax), np.int32)
-    a_cols = np.zeros((mb, amax), np.int32)
-    for i in range(mb):
-        lo, hi = a_indptr[i], a_indptr[i + 1]
-        a_slots[i, : hi - lo] = np.arange(lo, hi)
-        a_cols[i, : hi - lo] = a_indices[lo:hi]
-    b_slots = np.zeros((kb, fmax), np.int32)
-    b_cols = np.zeros((kb, fmax), np.int32)
-    for k in range(kb):
-        lo, hi = b_indptr[k], b_indptr[k + 1]
-        b_slots[k, : hi - lo] = np.arange(lo, hi)
-        b_cols[k, : hi - lo] = b_indices[lo:hi]
+    if tables is None:
+        tables = build_gust_tables(a, b)
+    amax, fmax = tables.amax, tables.fmax
 
     n_padded = nb * bn
 
@@ -130,9 +175,9 @@ def gust_spmm(a: BlockCSR, b: BlockCSR, *, out_dtype=jnp.float32,
         compiler_params=compiler_params(("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(
-        jnp.asarray(a_slots.reshape(-1)), jnp.asarray(a_cols.reshape(-1)),
-        jnp.asarray(a_len), jnp.asarray(b_slots.reshape(-1)),
-        jnp.asarray(b_cols.reshape(-1)), jnp.asarray(b_len),
+        jnp.asarray(tables.a_slots), jnp.asarray(tables.a_cols),
+        jnp.asarray(tables.a_len), jnp.asarray(tables.b_slots),
+        jnp.asarray(tables.b_cols), jnp.asarray(tables.b_len),
         a.data, b.data,
     )
     return out[: a.shape[0], : b.shape[1]]

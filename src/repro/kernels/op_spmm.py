@@ -22,6 +22,7 @@ structurally present: the psum buffer makes a full HBM round trip.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
@@ -35,7 +36,49 @@ from ..core.dataflows import StreamPlan, build_op_plan
 from ..core.formats import BlockCSR, BlockCSC
 from .common import accumulate_or_flush, compiler_params, grid_spec
 
-__all__ = ["op_spmm", "merge_psums"]
+__all__ = ["op_spmm", "merge_psums", "MergePlan", "build_merge_plan"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MergePlan:
+    """Destination-sorted merge schedule for the OP merging phase.
+
+    Pattern-only (phase-1): the PSRAM set/tag lookup played by a host sort of
+    the psum work list's destination coordinates.
+    """
+
+    order: np.ndarray      # (W,) psum stream permutation, destination-sorted
+    is_first: np.ndarray   # (W,) int32 — run boundary flags
+    is_last: np.ndarray
+    run_id: np.ndarray     # (W,) int32 — output fiber index per psum
+    run_ci: np.ndarray     # (n_runs,) destination block coords per run
+    run_cj: np.ndarray
+    n_runs: int
+
+    def tree_flatten(self):
+        return ((self.order, self.is_first, self.is_last, self.run_id,
+                 self.run_ci, self.run_cj), (self.n_runs,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def build_merge_plan(ci: np.ndarray, cj: np.ndarray, nb: int) -> MergePlan:
+    """Sort the psum stream by destination and mark run boundaries."""
+    w_total = int(ci.size)
+    order = np.lexsort((cj, ci))                 # row-by-row, then column
+    ci_s, cj_s = ci[order], cj[order]
+    dest = ci_s.astype(np.int64) * nb + cj_s
+    is_first = np.ones(w_total, dtype=np.int32)
+    is_first[1:] = (dest[1:] != dest[:-1]).astype(np.int32)
+    is_last = np.ones(w_total, dtype=np.int32)
+    is_last[:-1] = (dest[1:] != dest[:-1]).astype(np.int32)
+    run_id = np.cumsum(is_first) - 1             # output fiber index
+    n_runs = int(run_id[-1]) + 1 if w_total else 0
+    return MergePlan(order, is_first, is_last, run_id.astype(np.int32),
+                     ci_s[is_first == 1], cj_s[is_first == 1], n_runs)
 
 
 def _stream_kernel(a_slot_ref, b_slot_ref, a_ref, b_ref, psum_ref):
@@ -63,24 +106,21 @@ def _merge_kernel(run_id_ref, is_first_ref, is_last_ref, psum_ref, o_ref,
 
 
 def merge_psums(psums: jax.Array, ci: np.ndarray, cj: np.ndarray,
-                out_grid: Tuple[int, int], *, out_dtype=jnp.float32,
-                interpret: bool = True) -> jax.Array:
+                out_grid: Tuple[int, int], *, merge: MergePlan | None = None,
+                out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
     """Merging phase: combine a psum block stream by destination coordinate.
 
     psums: (W, bm, bn) fp32 psum blocks; ci/cj: (W,) destination block coords
-    (host-side).  Returns dense C of shape (Mb*bm, Nb*bn).
+    (host-side).  ``merge`` (from :func:`build_merge_plan`) supplies the
+    phase-1 schedule; omitted, it is rebuilt here.  Returns dense C of shape
+    (Mb*bm, Nb*bn).
     """
     w_total, bm, bn = psums.shape
     mb, nb = out_grid
-    order = np.lexsort((cj, ci))                 # row-by-row, then column
-    ci_s, cj_s = ci[order], cj[order]
-    dest = ci_s.astype(np.int64) * nb + cj_s
-    is_first = np.ones(w_total, dtype=np.int32)
-    is_first[1:] = (dest[1:] != dest[:-1]).astype(np.int32)
-    is_last = np.ones(w_total, dtype=np.int32)
-    is_last[:-1] = (dest[1:] != dest[:-1]).astype(np.int32)
-    run_id = np.cumsum(is_first) - 1             # output fiber index
-    n_runs = int(run_id[-1]) + 1 if w_total else 0
+    if merge is None:
+        merge = build_merge_plan(ci, cj, nb)
+    order, is_first, is_last = merge.order, merge.is_first, merge.is_last
+    run_id, n_runs = merge.run_id, merge.n_runs
 
     psums_sorted = psums[jnp.asarray(order)]
 
@@ -104,15 +144,16 @@ def merge_psums(psums: jax.Array, ci: np.ndarray, cj: np.ndarray,
       jnp.asarray(is_last), psums_sorted)
 
     # Final output fibers stream to DRAM; place them in the dense C image.
-    run_ci = jnp.asarray(ci_s[is_first == 1], jnp.int32)
-    run_cj = jnp.asarray(cj_s[is_first == 1], jnp.int32)
+    run_ci = jnp.asarray(merge.run_ci, jnp.int32)
+    run_cj = jnp.asarray(merge.run_cj, jnp.int32)
     c = jnp.zeros((mb, nb, bm, bn), out_dtype)
     c = c.at[run_ci, run_cj].set(runs)
     return c.swapaxes(1, 2).reshape(mb * bm, nb * bn)
 
 
 def op_spmm(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None, *,
-            out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+            merge: MergePlan | None = None, out_dtype=jnp.float32,
+            interpret: bool = True) -> jax.Array:
     """C = A @ B via the Outer-Product dataflow.  Returns dense C (M, N)."""
     if plan is None:
         plan = build_op_plan(a, b)
@@ -149,6 +190,6 @@ def op_spmm(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None, *,
     )(a_slot, b_slot, a.data, b.data)
 
     # ---- merging phase: row-by-row through the MRN substrate -------------
-    c = merge_psums(psums, plan.ci, plan.cj, (mb, nb),
+    c = merge_psums(psums, plan.ci, plan.cj, (mb, nb), merge=merge,
                     out_dtype=out_dtype, interpret=interpret)
     return c[: a.shape[0], : b.shape[1]]

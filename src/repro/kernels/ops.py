@@ -1,13 +1,21 @@
 """Public jit'd entry points for the Flexagon kernels.
 
-``flexagon_spmm`` is the paper's user-visible feature: one call that runs
-SpMSpM with the best dataflow for the operands — the phase-1 mapper/compiler
-(:mod:`repro.core.selector`) chooses among IP / OP / Gust, then the matching
-kernel (Pallas, TPU) or pure-JAX dataflow reference (CPU / dry-run) executes.
+``flexagon_spmm`` remains as a one-shot convenience shim: it runs phase 1
+(:func:`repro.api.flexagon_plan`) and phase 2 (``plan.apply``) back to back
+on every call.
+
+.. deprecated::
+    For anything called more than once per sparsity pattern — serving loops,
+    per-layer inference, benchmarks — use the plan-once API instead::
+
+        plan = flexagon_plan(a, b, block_shape=..., spec=...)
+        c = plan.apply(a, b)          # reusable, jit-compatible
+
+    The shim re-inspects occupancy, re-runs the selector and rebuilds index
+    plans per call, exactly the host-side cost the plan API amortizes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
@@ -15,10 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import dataflows as df
-from ..core.formats import (
-    BlockCSR, BlockCSC, dense_to_bcsr, dense_to_bcsc, block_occupancy,
-)
-from ..core.selector import LayerShape, TPUSpec, select_dataflow
+from ..core.formats import dense_to_bcsr, dense_to_bcsc
+from ..core.selector import TPUSpec
 from .gust_spmm import gust_spmm
 from .ip_spmm import ip_spmm
 from .op_spmm import op_spmm
@@ -40,7 +46,7 @@ def spmm_with_dataflow(a_dense, b_dense, dataflow: str,
     """
     bm, bk, bn = block_shape
     if not use_pallas:
-        out = df.run_dataflow(dataflow, a_dense, b_dense, (bm, bk))
+        out = df.run_dataflow(dataflow, a_dense, b_dense, (bm, bk, bn))
         return out.astype(out_dtype)
 
     if dataflow.endswith("_n"):
@@ -72,21 +78,13 @@ def flexagon_spmm(a_dense, b_dense, *, dataflow: Dataflow = "auto",
                   out_dtype=jnp.float32):
     """SpMSpM with per-operation dataflow selection (the paper's headline).
 
-    Returns ``(C, chosen_dataflow)``.
+    Returns ``(C, chosen_dataflow)``.  Deprecated convenience shim over the
+    plan-once API — see the module docstring; prefer
+    :func:`repro.api.flexagon_plan` whenever a pattern repeats.
     """
-    a_np = np.asarray(a_dense)
-    b_np = np.asarray(b_dense)
-    if dataflow == "auto":
-        bm, bk, bn = block_shape
-        occ_a = block_occupancy(a_np, (bm, bk))
-        occ_b = block_occupancy(b_np, (bk, bn))
-        shape = LayerShape(
-            m=a_np.shape[0], k=a_np.shape[1], n=b_np.shape[1],
-            density_a=float(occ_a.mean()), density_b=float(occ_b.mean()),
-            block=block_shape,
-        )
-        dataflow = select_dataflow(shape, spec)
-    out = spmm_with_dataflow(a_np, b_np, dataflow, block_shape,
-                             use_pallas=use_pallas, interpret=interpret,
-                             out_dtype=out_dtype)
-    return out, dataflow
+    from ..api import flexagon_plan
+
+    plan = flexagon_plan(a_dense, b_dense, dataflow=dataflow,
+                         block_shape=block_shape, spec=spec,
+                         use_pallas=use_pallas, interpret=interpret)
+    return plan.apply(a_dense, b_dense, out_dtype=out_dtype), plan.dataflow

@@ -31,7 +31,8 @@ import numpy as np
 from .layers import dense_init
 from ..sharding.act import shard
 
-__all__ = ["moe_init", "moe_apply", "select_moe_strategy"]
+__all__ = ["moe_init", "moe_apply", "select_moe_strategy", "MoEPlan",
+           "plan_moe"]
 
 
 def moe_init(key, cfg):
@@ -201,14 +202,41 @@ def select_moe_strategy(t: int, d: int, f: int, e: int, k: int) -> str:
     return min(costs, key=costs.get)
 
 
-def moe_apply(p, cfg, x, *, strategy: Optional[str] = None):
-    """x: (B, S, D) -> (B, S, D)."""
-    b, s, d = x.shape
-    x2d = x.reshape(b * s, d)
+@dataclasses.dataclass(frozen=True)
+class MoEPlan:
+    """Phase-1 output for one MoE layer shape: the dispatch strategy, chosen
+    once and reused for every execution with the same token count (the MoE
+    analogue of :class:`repro.api.FlexagonPlan`)."""
+
+    strategy: str
+    tokens: int
+
+
+def plan_moe(cfg, tokens: int, *, strategy: Optional[str] = None) -> MoEPlan:
+    """Run the MoE strategy selector once for this token shape."""
     strat = strategy or cfg.moe.strategy
     if strat == "auto":
-        strat = select_moe_strategy(b * s, d, cfg.d_ff,
+        strat = select_moe_strategy(tokens, cfg.d_model, cfg.d_ff,
                                     cfg.moe.num_experts, cfg.moe.top_k)
+    return MoEPlan(strategy=strat, tokens=tokens)
+
+
+def moe_apply(p, cfg, x, *, strategy: Optional[str] = None,
+              plan: Optional[MoEPlan] = None):
+    """x: (B, S, D) -> (B, S, D).
+
+    ``plan`` (from :func:`plan_moe`) skips the per-call strategy selection —
+    serving loops plan at admission and execute many times.
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    if plan is not None:
+        strat = plan.strategy
+    else:
+        strat = strategy or cfg.moe.strategy
+        if strat == "auto":
+            strat = select_moe_strategy(b * s, d, cfg.d_ff,
+                                        cfg.moe.num_experts, cfg.moe.top_k)
     if strat == "einsum":
         out = _moe_einsum(p, cfg, x2d)
     elif strat == "scatter":

@@ -2,105 +2,148 @@
 model.
 
 Training keeps block-masked dense weights (`ffn.py`); for serving, this
-module *compresses* the pruned FFN to BCSR/BCSC once (offline, phase-1) and
-runs every matmul through the selected SpMSpM dataflow:
+module runs phase 1 *once* per (token count, layer) through the plan API:
 
-- phase 1: `compress_ffn` — measure block occupancy, pick a dataflow per
-  matmul via the cost-model selector, build the plan (the mapper/compiler);
-- runtime: `sparse_ffn_apply` — executes through the pure-JAX dataflows (or
-  the Pallas kernels on TPU via ``use_pallas``).
+- phase 1: `compress_ffn` — builds :class:`repro.api.FlexagonPlan`s for each
+  of the FFN's three matmuls (occupancy → selector → compression layout →
+  index plans) and packs the weights into the planned formats;
+- runtime: `sparse_ffn_apply` — pure plan.apply calls, jit-compatible, zero
+  host-side re-planning.  A decode loop that admits new token shapes gets a
+  shape-specialized plan from the per-FFN cache (`CompressedFFN.specialize`),
+  built at admission and reused every subsequent step.
 
 The activations-side operand is dense here (weights sparse × activations
-dense), the SpMM special case of SpMSpM — the selector handles it as density
-1.0 on the B operand.
+dense), the SpMM special case of SpMSpM — `flexagon_plan` takes the bare
+``(tokens, d)`` shape as a fully-dense pattern.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import dataflows as df
-from ..core.formats import (block_occupancy, dense_to_bcsc, dense_to_bcsr)
-from ..core.selector import LayerShape, TPUSpec, select_dataflow
+from ..api import FlexagonPlan, SparseOperand, flexagon_plan
+from ..core.selector import TPUSpec
 from .ffn import _masked_weight
 
-__all__ = ["CompressedFFN", "compress_ffn", "sparse_ffn_apply"]
+__all__ = ["CompressedFFN", "PlannedFFN", "compress_ffn", "sparse_ffn_apply"]
 
 
 @dataclasses.dataclass
+class PlannedFFN:
+    """Plans + packed weights for one token shape (phase-1 output)."""
+
+    plan_in: FlexagonPlan        # x @ w_gate and x @ w_up  (same pattern)
+    plan_out: FlexagonPlan       # h @ w_down
+    w_gate: SparseOperand
+    w_up: SparseOperand
+    w_down: SparseOperand
+
+
 class CompressedFFN:
-    """One FFN's three matmuls, compressed + planned (phase-1 output)."""
+    """One pruned FFN, planned per token shape and cached.
 
-    w_gate: Any           # BlockCSR/BlockCSC of (D, F)
-    w_up: Any
-    w_down: Any           # (F, D)
-    dataflow_in: str      # for x @ w_gate / x @ w_up
-    dataflow_out: str     # for h @ w_down
-    block: int
+    ``specialize(tokens)`` is the admission-time hook: the first request for
+    a token shape runs phase 1 (counted in ``plan_builds``); every subsequent
+    request is a dictionary hit (``plan_hits``) — the plan-once / execute-many
+    contract for serving loops.
+    """
 
+    def __init__(self, w_gate: np.ndarray, w_up: np.ndarray,
+                 w_down: np.ndarray, *, tokens: int, block: int = 128,
+                 spec: TPUSpec = TPUSpec()):
+        self._dense = (w_gate, w_up, w_down)    # masked dense, phase-1 only
+        self.block = block
+        self.spec = spec
+        self.tokens = tokens
+        self._by_tokens: Dict[int, PlannedFFN] = {}
+        # packed weights are keyed by ("gate"|"up"|"down", planned B format):
+        # the weight-side layout depends only on the weight pattern and the
+        # format Table 3 assigns, so token shapes sharing a dataflow family
+        # share one packed copy instead of one per token count
+        self._packed: Dict[tuple, SparseOperand] = {}
+        self.plan_builds = 0
+        self.plan_hits = 0
+        self.specialize(tokens)
 
-def _compress_one(w_masked: np.ndarray, dataflow: str, block: int):
-    """Table 3 formats: the stationary/streaming roles decide CSR vs CSC of
-    the *weight* operand (we treat the weight as matrix B: x[M,K] @ w[K,N])."""
-    fmt_b = {"ip_m": "bcsc", "op_m": "bcsr", "gust_m": "bcsr",
-             "ip_n": "bcsc", "op_n": "bcsr", "gust_n": "bcsc"}[dataflow]
-    bs = (block, block)
-    return (dense_to_bcsc(w_masked, bs) if fmt_b == "bcsc"
-            else dense_to_bcsr(w_masked, bs))
+    def _pack(self, which: str, w: np.ndarray, plan: FlexagonPlan
+              ) -> SparseOperand:
+        key = (which, plan.formats[1])
+        packed = self._packed.get(key)
+        if packed is None:
+            packed = plan.pack_b(w)
+            self._packed[key] = packed
+        return packed
+
+    def specialize(self, tokens: int) -> PlannedFFN:
+        """Plans for this token count — built once, then cache hits."""
+        entry = self._by_tokens.get(tokens)
+        if entry is not None:
+            self.plan_hits += 1
+            return entry
+        wg, wu, wd = self._dense
+        d, f = wg.shape
+        bs = (self.block, self.block, self.block)
+        plan_in = flexagon_plan((tokens, d), wg, block_shape=bs,
+                                spec=self.spec)
+        plan_out = flexagon_plan((tokens, f), wd, block_shape=bs,
+                                 spec=self.spec)
+        entry = PlannedFFN(plan_in, plan_out,
+                           self._pack("gate", wg, plan_in),
+                           self._pack("up", wu, plan_in),
+                           self._pack("down", wd, plan_out))
+        self._by_tokens[tokens] = entry
+        self.plan_builds += 1
+        return entry
+
+    # -- conveniences over the default (construction-time) token shape ----
+    @property
+    def _default(self) -> PlannedFFN:
+        return self._by_tokens[self.tokens]
+
+    @property
+    def w_gate(self) -> SparseOperand:
+        return self._default.w_gate
+
+    @property
+    def w_up(self) -> SparseOperand:
+        return self._default.w_up
+
+    @property
+    def w_down(self) -> SparseOperand:
+        return self._default.w_down
+
+    @property
+    def dataflow_in(self) -> str:
+        return self._default.plan_in.dataflow
+
+    @property
+    def dataflow_out(self) -> str:
+        return self._default.plan_out.dataflow
 
 
 def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
                  block: int = 128, spec: TPUSpec = TPUSpec()) -> CompressedFFN:
-    """Phase 1 for one pruned FFN layer: occupancy → dataflow → compress."""
+    """Phase 1 for one pruned FFN layer: occupancy → dataflow → plans."""
     assert "block_mask" in ffn_params, "FFN is not block-pruned"
-    mask = np.asarray(ffn_params["block_mask"])
     wg = np.asarray(_masked_weight(ffn_params["w_gate"]["w"],
                                    ffn_params["block_mask"]))
     wu = np.asarray(_masked_weight(ffn_params["w_up"]["w"],
                                    ffn_params["block_mask"]))
     wd = np.asarray(_masked_weight(ffn_params["w_down"]["w"],
                                    ffn_params["block_mask"].T))
-    d, f = wg.shape
-
-    density = float(mask.mean())
-    df_in = select_dataflow(LayerShape(
-        m=tokens, k=d, n=f, density_a=1.0, density_b=density,
-        block=(block, block, block)), spec)
-    df_out = select_dataflow(LayerShape(
-        m=tokens, k=f, n=d, density_a=1.0, density_b=density,
-        block=(block, block, block)), spec)
-    return CompressedFFN(
-        w_gate=_compress_one(wg, df_in, block),
-        w_up=_compress_one(wu, df_in, block),
-        w_down=_compress_one(wd, df_out, block),
-        dataflow_in=df_in,
-        dataflow_out=df_out,
-        block=block,
-    )
-
-
-def _spmm(x2d: jax.Array, w_comp, dataflow: str, block: int) -> jax.Array:
-    """x[M,K] @ w[K,N] through the chosen dataflow; the dense activations are
-    compressed on the fly (fully-occupied block structure)."""
-    bs = (block, block)
-    xc = {"ip_m": dense_to_bcsr, "op_m": dense_to_bcsc,
-          "gust_m": dense_to_bcsr, "ip_n": dense_to_bcsr,
-          "op_n": dense_to_bcsc, "gust_n": dense_to_bcsc}[dataflow](
-              np.asarray(x2d, np.float32), bs)
-    fn = {"ip_m": df.ip_m, "op_m": df.op_m, "gust_m": df.gust_m,
-          "ip_n": df.ip_n, "op_n": df.op_n, "gust_n": df.gust_n}[dataflow]
-    return fn(xc, w_comp)
+    return CompressedFFN(wg, wu, wd, tokens=tokens, block=block, spec=spec)
 
 
 def sparse_ffn_apply(comp: CompressedFFN, x: jax.Array) -> jax.Array:
     """x: (B, S, D) -> (B, S, D) via the compressed, dataflow-planned FFN."""
     b, s, d = x.shape
-    x2d = x.reshape(b * s, d)
-    g = jax.nn.silu(_spmm(x2d, comp.w_gate, comp.dataflow_in, comp.block))
-    u = _spmm(x2d, comp.w_up, comp.dataflow_in, comp.block)
-    y = _spmm((g * u), comp.w_down, comp.dataflow_out, comp.block)
+    entry = comp.specialize(b * s)          # cache hit on steady-state shapes
+    x2d = x.reshape(b * s, d).astype(jnp.float32)
+    g = jax.nn.silu(entry.plan_in.apply(x2d, entry.w_gate))
+    u = entry.plan_in.apply(x2d, entry.w_up)
+    y = entry.plan_out.apply(g * u, entry.w_down)
     return y.reshape(b, s, d).astype(x.dtype)

@@ -6,9 +6,23 @@ batch-1 prefill written into the slot's cache lines); every ``step()`` runs
 one fused decode for all active slots; finished sequences free their slot for
 queued requests.  Greedy sampling by default.
 
-The MoE dataflow selector (paper phase-1) runs per decode shape: at decode,
-token counts are tiny so the Gust-analogue (sort) or OP-analogue (scatter)
-dispatch wins over the capacity einsum — recorded in engine stats.
+Phase 1 runs at admission, not per step (the plan-once / execute-many
+contract of :mod:`repro.api`):
+
+- MoE models get their dispatch strategy planned once for the fused decode
+  shape via :func:`repro.models.moe.plan_moe`, and the decode closure is
+  jitted against a model whose config pins that strategy — decode steps
+  skip the per-call selector entirely (at decode, token counts are tiny so
+  the Gust-analogue (sort) or OP-analogue (scatter) dispatch wins over the
+  capacity einsum).  The decode token count is always ``slots``, so the
+  pinned choice equals what "auto" would re-derive every step.  Prefill
+  keeps the unpinned model (its shapes vary per prompt).
+- a pruned-FFN model passes its :class:`repro.models.sparse_linear
+  .CompressedFFN`; the engine specializes it for the fused decode shape
+  (``slots`` tokens, exposed as ``decode_ffn``) at construction and for
+  each new prefill length at admission, so a model routing its FFN through
+  ``sparse_ffn_apply`` only ever hits cached plans
+  (``stats["plan_builds"]`` / ``stats["plan_hits"]``).
 """
 from __future__ import annotations
 
@@ -19,6 +33,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..models.moe import MoEPlan, plan_moe
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -42,7 +58,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, sparse_ffn=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -53,8 +69,31 @@ class ServeEngine:
         self._queue: deque = deque()
         self._finished: List[Request] = []
         self._positions = np.zeros(slots, np.int64)
-        self._decode = jax.jit(model.decode_step)
-        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0}
+        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
+                      "plan_builds": 0, "plan_hits": 0}
+        # phase 1 for the steady state, up front: the fused decode step
+        # always runs `slots` tokens, so its plans never change after this
+        self.sparse_ffn = sparse_ffn
+        self.decode_ffn = None
+        if sparse_ffn is not None:
+            self.decode_ffn = sparse_ffn.specialize(slots)
+        self.moe_plan: Optional[MoEPlan] = None
+        decode_model = model
+        cfg = getattr(model, "cfg", None)
+        if cfg is not None and getattr(cfg, "moe", None) is not None \
+                and cfg.moe.strategy == "auto":
+            self.moe_plan = plan_moe(cfg, slots)
+            pinned = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe,
+                                             strategy=self.moe_plan.strategy))
+            decode_model = type(model)(pinned)
+        self._decode = jax.jit(decode_model.decode_step)
+        self._sync_plan_stats()
+
+    def _sync_plan_stats(self):
+        if self.sparse_ffn is not None:
+            self.stats["plan_builds"] = self.sparse_ffn.plan_builds
+            self.stats["plan_hits"] = self.sparse_ffn.plan_hits
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
@@ -70,8 +109,15 @@ class ServeEngine:
             self._active[slot] = req
 
     def _prefill_into_slot(self, req: Request):
-        """Batch-1 prefill, written into this slot's cache lines."""
+        """Batch-1 prefill, written into this slot's cache lines.
+
+        Admission is where new shapes appear, so phase 1 for this prompt
+        length runs here (cached — repeat lengths are hits, and the decode
+        shape was planned at construction)."""
         model = self.model
+        if self.sparse_ffn is not None:
+            self.sparse_ffn.specialize(len(req.prompt))
+            self._sync_plan_stats()
         one_cache = model.init_cache(1, self.max_seq)
         tokens = jnp.asarray(req.prompt, jnp.int32)[None]
         logits, one_cache = model.prefill(self.params, tokens, one_cache)

@@ -3,7 +3,140 @@
 Gives the session a handful of CPU devices so sharding tests exercise real
 multi-device paths — but NOT the dry-run's 512 (smoke tests and benches
 should see a small device count; the dry-run sets its own flag).
+
+Also installs a minimal, deterministic ``hypothesis`` fallback when the real
+package is absent (the property tests import ``given``/``settings``/
+``strategies``): each ``@given`` test then runs against a fixed number of
+seeded pseudo-random examples instead of a shrinking search.  With the real
+hypothesis installed (see requirements.txt) the shim is inert.
 """
 import os
+import sys
+import types
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def _install_hypothesis_stub():
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+
+    import functools
+    import hashlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A strategy is just a callable rng -> value."""
+
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def example(self, rng):
+            return self._draw_fn(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    def one_of(*strategies):
+        return _Strategy(
+            lambda rng: strategies[int(rng.integers(len(strategies)))]
+            .example(rng))
+
+    def lists(elements, min_size=0, max_size=10, unique=False):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            if not unique:
+                return [elements.example(rng) for _ in range(size)]
+            out, seen = [], set()
+            for _ in range(1000):
+                if len(out) >= size:
+                    break
+                v = elements.example(rng)
+                key = v if not isinstance(v, np.ndarray) else v.tobytes()
+                if key not in seen:
+                    seen.add(key)
+                    out.append(v)
+            return out
+        return _Strategy(draw)
+
+    def tuples(*strategies):
+        return _Strategy(
+            lambda rng: tuple(s.example(rng) for s in strategies))
+
+    def composite(fn):
+        @functools.wraps(fn)
+        def strategy_factory(*args, **kwargs):
+            def draw_fn(rng):
+                return fn(lambda s: s.example(rng), *args, **kwargs)
+            return _Strategy(draw_fn)
+        return strategy_factory
+
+    _DEFAULT_EXAMPLES = 10
+
+    def given(*strategies, **kw_strategies):
+        def decorate(test_fn):
+            @functools.wraps(test_fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+                # hashlib, not hash(): str hashing is salted per process and
+                # would make failures unreproducible across runs
+                digest = hashlib.sha1(
+                    test_fn.__qualname__.encode()).hexdigest()
+                base = int(digest[:8], 16)
+                for i in range(n):
+                    rng = np.random.default_rng(base + i)
+                    drawn = [s.example(rng) for s in strategies]
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    test_fn(*args, *drawn, **kwargs, **drawn_kw)
+            # hide the original signature from pytest's fixture resolution
+            # (drawn arguments are not fixtures)
+            del wrapper.__wrapped__
+            wrapper.is_hypothesis_test = True
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        def decorate(fn):
+            # examples are deterministic (no shrinking), so a modest cap
+            # keeps the suite fast without losing case diversity
+            fn._stub_max_examples = min(max_examples, 15)
+            return fn
+        return decorate
+
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = "Deterministic fallback stub (real hypothesis not installed)."
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    for name, obj in [
+        ("integers", integers), ("floats", floats), ("booleans", booleans),
+        ("sampled_from", sampled_from), ("just", just), ("one_of", one_of),
+        ("lists", lists), ("tuples", tuples), ("composite", composite),
+    ]:
+        setattr(strategies_mod, name, obj)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies_mod
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies_mod
+
+
+_install_hypothesis_stub()

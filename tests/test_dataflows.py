@@ -33,6 +33,22 @@ def test_dataflow_matches_oracle(case, dataflow):
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+def test_run_dataflow_nonsquare_blocks(dataflow):
+    """Regression: a (bm, bk, bn) block shape with bm != bk != bn must give
+    B blocks of (bk, bn) — the seed derived them as (bk, bk)."""
+    rng = np.random.default_rng(21)
+    a = random_sparse_dense(rng, (12, 20), density=0.5)
+    b = random_sparse_dense(rng, (20, 18), density=0.6)
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    out = np.asarray(run_dataflow(dataflow, a, b, (4, 5, 6)))
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    # legacy 2-tuple still accepted (bn defaults to bk)
+    out2 = np.asarray(run_dataflow(dataflow, a, b, (4, 5)))
+    np.testing.assert_allclose(out2, ref, rtol=1e-4, atol=1e-4)
+
+
 def test_output_major_table():
     # Table 3: M-stationary emits row-major, N-stationary column-major
     assert OUTPUT_MAJOR["ip_m"] == OUTPUT_MAJOR["op_m"] == \

@@ -55,6 +55,64 @@ def test_continuous_batching_mixed_lengths(model_and_params):
         assert results[rid] == _reference_greedy(model, params, p, 4), rid
 
 
+def test_plans_built_at_admission_reused_at_decode(model_and_params):
+    """A plan-backed sparse FFN attached to the engine is specialized for
+    the fused decode shape at construction and per prompt length at
+    admission; decode steps are pure cache hits."""
+    import jax.numpy as jnp
+    from repro.models.ffn import ffn_init
+    from repro.models.sparse_linear import compress_ffn
+    from repro.configs.base import ModelConfig
+
+    cfg, model, params = model_and_params
+    fcfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, d_ff=96, vocab=64, ffn_block_sparsity=0.4)
+    fparams = ffn_init(jax.random.PRNGKey(0), fcfg)
+    fparams["block_mask"] = (jax.random.uniform(
+        jax.random.PRNGKey(9), (4, 6)) > 0.4).astype(jnp.float32)
+    comp = compress_ffn(fparams, tokens=2, block=16)      # decode shape
+
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(model, params, slots=2, max_seq=64, sparse_ffn=comp)
+    assert eng.decode_ffn is comp.specialize(2)           # decode shape ready
+    builds_after_init = comp.plan_builds
+    for rid in range(3):
+        eng.submit(Request(rid, rng.integers(0, cfg.vocab, size=5),
+                           max_new_tokens=4))
+    eng.run_to_completion()
+    # admission planned exactly one new shape (prompt length 5); the other
+    # two same-length admissions were cache hits, decode never re-planned
+    assert comp.plan_builds == builds_after_init + 1
+    assert comp.plan_hits >= 2
+    assert eng.stats["plan_builds"] == comp.plan_builds
+    assert eng.stats["plan_hits"] == comp.plan_hits
+
+
+def test_moe_decode_strategy_planned_once():
+    """An auto-strategy MoE model gets its dispatch strategy planned once
+    for the fused decode shape; the jitted decode closure runs with it
+    pinned (no per-step selector) and still matches reference decode."""
+    import dataclasses
+
+    from repro.models.moe import select_moe_strategy
+
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, strategy="auto"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=1, max_seq=64)
+    assert eng.moe_plan is not None and eng.moe_plan.tokens == 1
+    assert eng.moe_plan.strategy == select_moe_strategy(
+        1, cfg.d_model, cfg.d_ff, cfg.moe.num_experts, cfg.moe.top_k)
+    prompt = np.random.default_rng(5).integers(0, cfg.vocab, size=4)
+    eng.submit(Request(0, prompt, max_new_tokens=3))
+    out = eng.run_to_completion()[0]
+    # slots=1 makes the pinned decode shape equal the reference's, so the
+    # pinned strategy is exactly what auto re-derives — outputs identical
+    assert out == _reference_greedy(model, params, prompt, 3)
+
+
 def test_eos_frees_slot(model_and_params):
     cfg, model, params = model_and_params
     rng = np.random.default_rng(2)

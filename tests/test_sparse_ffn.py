@@ -46,3 +46,19 @@ def test_compression_respects_sparsity(pruned_ffn):
     # number of stored blocks == occupancy of the mask
     assert comp.w_gate.nnzb == int(mask.sum())
     assert comp.w_down.nnzb == int(mask.T.sum())
+
+
+def test_plans_built_once_per_token_shape(pruned_ffn):
+    """Phase 1 runs once per token count; repeat applies are cache hits."""
+    cfg, params = pruned_ffn
+    comp = compress_ffn(params, tokens=16, block=16)
+    assert comp.plan_builds == 1
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 64), jnp.float32)
+    for _ in range(3):
+        sparse_ffn_apply(comp, x)
+    assert comp.plan_builds == 1 and comp.plan_hits == 3
+    # a new shape plans once at admission, then hits
+    x2 = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 64), jnp.float32)
+    sparse_ffn_apply(comp, x2)
+    sparse_ffn_apply(comp, x2)
+    assert comp.plan_builds == 2 and comp.plan_hits == 4
