@@ -1,28 +1,45 @@
-"""Kernel microbenchmarks: plan-build vs steady-state apply, per dataflow.
+"""Kernel microbenchmarks: plan-build vs steady-state apply, per backend.
 
 Wall-clock here is CPU time (NOT TPU performance — the roofline story lives
 in EXPERIMENTS.md §Roofline); what this bench establishes is correctness at
-size and the phase split the plan API exists for:
+size and the phase split the plan API exists for, on every registered
+execution substrate:
 
-- ``plan_build`` — one-time phase-1 cost (occupancy, selector, layouts,
-  index plans);
+- ``plan_build`` — one-time phase-1 cost (occupancy, policy, layouts,
+  index plans, backend prepare);
 - ``plan_apply`` — steady-state phase-2 cost, the number that matters for a
   serving loop (and the ROADMAP perf trajectory);
-- ``legacy_spmm`` — the seed's per-call ``flexagon_spmm``, which pays both
-  on every invocation.
+- ``per_call``   — the seed-equivalent one-shot path (plan + apply on every
+  invocation), which pays both.
 
-``plan_apply`` must not exceed ``legacy_spmm`` on any shape (asserted).
+``plan_apply`` must not exceed ``per_call`` on any (shape, backend)
+(asserted).  Everything routes through the backend registry — no kernel
+module is imported here.
+
+CLI (the CI smoke step)::
+
+    python -m benchmarks.kernels_bench --quick --json BENCH_kernels.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
 
-from repro import flexagon_plan
-from repro.core import LayerShape, estimate_all, random_sparse_dense
-from repro.kernels import flexagon_spmm, spmm_ref, spmm_with_dataflow
+from repro import flexagon_plan, get_policy
+from repro.core import random_sparse_dense
+from repro.core.dataflows import DATAFLOWS
 from .common import Row
+
+BACKENDS = ("reference", "pallas")
+BS = (16, 16, 16)
+CASES = [
+    ("sq_like", 64, 64, 128, 0.3, 0.9),
+    ("op_like", 64, 256, 64, 0.1, 0.5),
+    ("gust_like", 128, 128, 64, 0.5, 0.2),
+]
 
 
 def _time(fn, reps=3):
@@ -34,47 +51,81 @@ def _time(fn, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> list[Row]:
+def run(quick: bool = False) -> list[Row]:
     rows = []
     rng = np.random.default_rng(7)
-    cases = [
-        ("sq_like", 64, 64, 128, 0.3, 0.9),
-        ("op_like", 64, 256, 64, 0.1, 0.5),
-        ("gust_like", 128, 128, 64, 0.5, 0.2),
-    ]
-    bs = (16, 16, 16)
+    cases = CASES[:1] if quick else CASES
+    dataflows = ("ip_m", "op_m", "gust_m") if quick else DATAFLOWS
+    reps = 1 if quick else 3
     for name, m, k, n, da, db in cases:
-        a = random_sparse_dense(rng, (m, k), density=da, block_shape=bs[:2])
-        b = random_sparse_dense(rng, (k, n), density=db, block_shape=bs[1:])
-        ref = np.asarray(spmm_ref(a, b))
-        for df in ("ip_m", "op_m", "gust_m"):
-            us = _time(lambda df=df: spmm_with_dataflow(a, b, df, bs))
-            out = np.asarray(spmm_with_dataflow(a, b, df, bs))
-            err = float(np.abs(out - ref).max())
-            rows.append(Row(f"kernels/{name}/{df}", us, f"max_err={err:.1e}"))
+        a = random_sparse_dense(rng, (m, k), density=da, block_shape=BS[:2])
+        b = random_sparse_dense(rng, (k, n), density=db, block_shape=BS[1:])
+        ref = a @ b
+        for backend in BACKENDS:
+            # per-dataflow correctness + latency through the registry
+            for df in dataflows:
+                plan = flexagon_plan(a, b, dataflow=df, block_shape=BS,
+                                     backend=backend)
+                us = _time(lambda p=plan: p.apply(a, b), reps=reps)
+                err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
+                rows.append(Row(f"kernels/{name}/{backend}/{df}", us,
+                                f"max_err={err:.1e}"))
 
-        # phase split: plan once (build) vs execute many (apply)
-        build_us = _time(lambda: flexagon_plan(a, b, block_shape=bs), reps=3)
-        plan = flexagon_plan(a, b, block_shape=bs)
-        apply_us = _time(lambda: plan.apply(a, b), reps=5)
-        legacy_us = _time(
-            lambda: flexagon_spmm(a, b, block_shape=bs, use_pallas=False)[0],
-            reps=5)
-        err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
-        rows.append(Row(f"kernels/{name}/plan_build", build_us,
-                        f"dataflow={plan.dataflow}"))
-        rows.append(Row(f"kernels/{name}/plan_apply", apply_us,
-                        f"max_err={err:.1e}"))
-        rows.append(Row(f"kernels/{name}/legacy_spmm", legacy_us,
-                        "per-call plan+apply"))
-        # 1.25x headroom so scheduler noise on a loaded box doesn't abort
-        # the whole run; the reported rows carry the actual numbers
-        assert apply_us <= legacy_us * 1.25, (
-            f"{name}: steady-state apply ({apply_us:.0f}us) slower than "
-            f"per-call flexagon_spmm ({legacy_us:.0f}us)")
+            # phase split: plan once (build) vs execute many (apply) vs the
+            # seed-equivalent per-call path that pays both every time
+            build_us = _time(
+                lambda be=backend: flexagon_plan(a, b, block_shape=BS,
+                                                 backend=be), reps=reps)
+            plan = flexagon_plan(a, b, block_shape=BS, backend=backend)
+            apply_us = _time(lambda: plan.apply(a, b), reps=max(reps, 2))
+            per_call_us = _time(
+                lambda be=backend: flexagon_plan(
+                    a, b, block_shape=BS, backend=be).apply(a, b),
+                reps=max(reps, 2))
+            err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
+            rows.append(Row(f"kernels/{name}/{backend}/plan_build", build_us,
+                            f"dataflow={plan.dataflow}"))
+            rows.append(Row(f"kernels/{name}/{backend}/plan_apply", apply_us,
+                            f"max_err={err:.1e}"))
+            rows.append(Row(f"kernels/{name}/{backend}/per_call", per_call_us,
+                            "per-call plan+apply"))
+            # 1.25x headroom so scheduler noise on a loaded box doesn't abort
+            # the whole run; the reported rows carry the actual numbers
+            assert apply_us <= per_call_us * 1.25, (
+                f"{name}/{backend}: steady-state apply ({apply_us:.0f}us) "
+                f"slower than per-call plan+apply ({per_call_us:.0f}us)")
 
-        ests = estimate_all(
-            LayerShape(m, k, n, da, db, block=bs))
-        sel = min(ests.values(), key=lambda e: e.time_s).dataflow
-        rows.append(Row(f"kernels/{name}/selector", 0.0, f"choice={sel}"))
+        # selection policies, through the same seam the plans use
+        for pname in ("heuristic", "simulator"):
+            pol = get_policy(pname)
+            plan = flexagon_plan(a, b, block_shape=BS, policy=pol)
+            rows.append(Row(f"kernels/{name}/policy_{pname}", 0.0,
+                            f"choice={plan.dataflow}"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="1 case, 3 dataflows, 1 rep (CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv())
+    if args.json:
+        payload = {
+            "bench": "kernels",
+            "quick": args.quick,
+            "rows": [{"name": r.name, "us_per_call": r.us_per_call,
+                      "derived": r.derived} for r in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

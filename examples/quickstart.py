@@ -1,10 +1,11 @@
 """Quickstart: the paper in one script.
 
 1. Build two sparse matrices, run C = A @ B through all six SpMSpM dataflows
-   (pure JAX) and the three Pallas TPU kernels (interpret mode on CPU) —
-   everyone agrees with the dense oracle.
+   on both execution backends — `reference` (pure JAX) and `pallas` (TPU
+   kernels, interpret mode on CPU) — everyone agrees with the dense oracle.
 2. Plan once with the phase-1 mapper/compiler (`flexagon_plan`), execute many
-   — including under `jax.jit` — and chain layers with `FlexagonPipeline`.
+   — including under `jax.jit` — swap selection policies (heuristic vs the
+   cycle-level simulator), and chain layers with `FlexagonPipeline`.
 3. Reproduce the paper's headline on one Table 6 layer with the cycle-level
    simulator: Flexagon == best of {SIGMA-like, SpArch-like, GAMMA-like}.
 
@@ -13,41 +14,51 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro import FlexagonPipeline, SparseOperand, flexagon_plan
+from repro import (FlexagonPipeline, SparseOperand, available_backends,
+                   flexagon_plan, get_policy)
 from repro.core import (DATAFLOWS, LayerShape, random_sparse_dense,
-                        run_dataflow, select_dataflow)
+                        select_dataflow)
 from repro.core.simulator import ACCELERATORS, from_layer, simulate
 from repro.core.workloads import PAPER_LAYERS
-from repro.kernels import spmm_ref, spmm_with_dataflow
 
 
 def main():
     rng = np.random.default_rng(0)
     a = random_sparse_dense(rng, (64, 64), density=0.3, block_shape=(16, 16))
     b = random_sparse_dense(rng, (64, 96), density=0.6, block_shape=(16, 16))
-    oracle = np.asarray(spmm_ref(a, b))
+    oracle = a @ b
 
-    print("== six dataflows, one answer ==")
+    print(f"== six dataflows × two backends, one answer "
+          f"(registry: {', '.join(available_backends())}) ==")
     for df in DATAFLOWS:
-        out = np.asarray(run_dataflow(df, a, b, (16, 16)))
-        print(f"  {df:8s} max|err| = {np.abs(out - oracle).max():.2e}")
-
-    print("== Pallas kernels (interpret mode) ==")
-    for df in ("ip_m", "op_m", "gust_m"):
-        out = np.asarray(spmm_with_dataflow(a, b, df, (16, 16, 16)))
-        print(f"  {df:8s} max|err| = {np.abs(out - oracle).max():.2e}")
+        errs = []
+        for backend in ("reference", "pallas"):
+            plan = flexagon_plan(a, b, dataflow=df, block_shape=(16, 16, 16),
+                                 backend=backend)
+            out = np.asarray(plan.apply(a, b))
+            errs.append(f"{backend} {np.abs(out - oracle).max():.2e}")
+        print(f"  {df:8s} max|err| = {' | '.join(errs)}")
 
     print("== plan once (phase 1), execute many (phase 2) ==")
     plan = flexagon_plan(a, b, block_shape=(16, 16, 16))
     print(f"  selector picked {plan.dataflow!r} "
           f"(est {plan.estimate.time_s * 1e9:.1f} ns on TPUSpec), "
-          f"output major order {plan.out_major!r}")
+          f"output major order {plan.out_major!r}, "
+          f"backend {plan.backend!r}")
+    print("== swap the selection policy (same plan surface) ==")
+    for pname in ("heuristic", "simulator"):
+        p = flexagon_plan(a, b, block_shape=(16, 16, 16), policy=pname)
+        print(f"  policy {pname!r:12s} -> {p.dataflow}")
+    autotuned = flexagon_plan(a, b, block_shape=(16, 16, 16),
+                              policy=get_policy("autotune"))
+    print(f"  policy 'autotune'  -> {autotuned.dataflow} "
+          "(measured on-device, cached by pattern fingerprint)")
     out = np.asarray(plan.apply(a, b))
     print(f"  plan.apply          max|err| = {np.abs(out - oracle).max():.2e}")
     # same pattern, new values — no re-planning, and jit-compatible
     a2 = a * 3.0
     out2 = np.asarray(jax.jit(plan.apply)(a2, b))
-    ref2 = np.asarray(spmm_ref(a2, b))
+    ref2 = a2 @ b
     print(f"  jit(plan.apply)     max|err| = {np.abs(out2 - ref2).max():.2e}")
     # operands can be packed once and reused too
     a_packed = plan.pack_a(a)

@@ -5,10 +5,14 @@ Public operator surface (see DESIGN.md for the phase-1/phase-2 contract):
 - :func:`flexagon_plan` / :class:`FlexagonPlan` — plan once, execute many;
 - :class:`SparseOperand` / :class:`SparseFormat` — unified format surface;
 - :class:`FlexagonPipeline` — Table 4-legal per-layer plan chains;
-- :class:`PlanCache` — fingerprint-keyed plan reuse for serving loops.
+- :class:`PlanCache` — fingerprint-keyed plan reuse for serving loops;
+- ``repro.backends`` — pluggable execution backends
+  (``reference``/``pallas``/``simulator``) and selection policies
+  (``heuristic``/``simulator``/``autotune``/fixed) behind
+  ``flexagon_plan(..., backend=..., policy=...)``.
 
-Subpackages: ``core`` (formats/dataflows/selector/simulator), ``kernels``
-(Pallas), ``models``, ``serve``, ``train``, ``launch``.
+Subpackages: ``core`` (formats/dataflows/selector/simulator), ``backends``,
+``kernels`` (Pallas), ``models``, ``serve``, ``train``, ``launch``.
 """
 from .api import (  # noqa: F401
     FlexagonPipeline,
@@ -18,6 +22,12 @@ from .api import (  # noqa: F401
     SparseOperand,
     flexagon_plan,
 )
+from .backends import (  # noqa: F401
+    available_backends,
+    get_backend,
+    get_policy,
+    register_backend,
+)
 
 __all__ = [
     "FlexagonPipeline",
@@ -26,4 +36,8 @@ __all__ = [
     "SparseFormat",
     "SparseOperand",
     "flexagon_plan",
+    "available_backends",
+    "get_backend",
+    "get_policy",
+    "register_backend",
 ]

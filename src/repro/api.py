@@ -22,13 +22,20 @@ makes the split explicit:
   that keeps inter-layer activations in the producer's major order
   (Table 4 legality; DESIGN.md §4).
 
+Both phase-1 halves are pluggable (DESIGN.md §11): ``backend=`` names the
+execution substrate (``reference`` / ``pallas`` / ``simulator``, or any
+registered :class:`repro.backends.ExecutionBackend`) and ``policy=`` the
+dataflow-selection strategy (``heuristic`` / ``simulator`` / ``autotune``,
+or any :class:`repro.backends.SelectionPolicy`).  Plans store only the
+backend *name* and resolve the substrate through the registry at execution
+time, so they remain plain pytrees.
+
 ``PHASE1_COUNTERS`` counts selector / layout / index-plan constructions so
 tests (and profiles) can assert that execution never re-plans.
 """
 from __future__ import annotations
 
 import dataclasses
-import enum
 import hashlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -36,10 +43,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backends import ExecutionBackend, get_backend
+from .backends.base import TABLE3_FORMATS as _TABLE3_FORMATS
+from .backends.base import allowed_dataflows
+from .backends.policies import SelectionContext, SelectionPolicy, get_policy
 from .core import dataflows as df
 from .core.formats import (
-    CSC, CSR, BlockCSC, BlockCSR, block_occupancy, dense_to_bcsc,
-    dense_to_bcsr,
+    CSC, CSR, BlockCSC, BlockCSR, SparseFormat, block_occupancy,
+    dense_to_bcsc, dense_to_bcsr,
 )
 from .core.selector import (
     DataflowEstimate, LayerShape, TPUSpec, estimate, plan_network,
@@ -59,33 +70,6 @@ __all__ = [
 #: Phase-1 work counters — bumped ONLY while planning.  ``plan.apply`` must
 #: leave them untouched (asserted by tests/test_api.py).
 PHASE1_COUNTERS = {"selector": 0, "layouts": 0, "index_plans": 0}
-
-
-class SparseFormat(enum.Enum):
-    """The four storage formats behind one constructor surface.
-
-    Block formats feed the dataflow executors / Pallas kernels; scalar
-    formats are the paper-exact fibers consumed by the cycle-level simulator.
-    """
-
-    BCSR = "bcsr"
-    BCSC = "bcsc"
-    CSR = "csr"
-    CSC = "csc"
-
-    @classmethod
-    def of(cls, fmt: Union[str, "SparseFormat"]) -> "SparseFormat":
-        return fmt if isinstance(fmt, cls) else cls(str(fmt).lower())
-
-    @property
-    def is_block(self) -> bool:
-        return self in (SparseFormat.BCSR, SparseFormat.BCSC)
-
-    @property
-    def major(self) -> str:
-        """Fiber major order: rows ("csr") or columns ("csc")."""
-        return "csr" if self in (SparseFormat.BCSR, SparseFormat.CSR) \
-            else "csc"
 
 
 _BLOCK_CLS = {SparseFormat.BCSR: BlockCSR, SparseFormat.BCSC: BlockCSC}
@@ -290,22 +274,10 @@ class CompressionLayout:
 # FlexagonPlan — phase 1 exactly once
 # ---------------------------------------------------------------------------
 
-#: Table 3 operand formats per dataflow: (A format, B format).
-_TABLE3_FORMATS = {
-    "ip_m": (SparseFormat.BCSR, SparseFormat.BCSC),
-    "op_m": (SparseFormat.BCSC, SparseFormat.BCSR),
-    "gust_m": (SparseFormat.BCSR, SparseFormat.BCSR),
-    "ip_n": (SparseFormat.BCSR, SparseFormat.BCSC),
-    "op_n": (SparseFormat.BCSC, SparseFormat.BCSR),
-    "gust_n": (SparseFormat.BCSC, SparseFormat.BCSC),
-}
-
-_EXECUTORS = {
-    "ip_m": df.ip_m, "op_m": df.op_m, "gust_m": df.gust_m,
-    "ip_n": df.ip_n, "op_n": df.op_n, "gust_n": df.gust_n,
-}
-
 OperandSpec = Union[np.ndarray, jax.Array, SparseOperand, Tuple[int, int]]
+
+BackendArg = Union[str, ExecutionBackend, None]
+PolicyArg = Union[str, SelectionPolicy, None]
 
 
 def _pattern_consistent(x: SparseOperand, layout: CompressionLayout) -> bool:
@@ -363,47 +335,56 @@ class FlexagonPlan:
 
     ``apply(a, b)`` / ``plan(a, b)`` executes with zero host-side plan
     building: operands (dense arrays or :class:`SparseOperand` in the planned
-    formats) are ingested through frozen gathers and run through the planned
-    executor.  Safe to call under ``jax.jit`` and to reuse across any number
-    of value sets sharing the pattern.
+    formats) are ingested through frozen gathers and handed to the planned
+    backend's ``execute``.  Safe to call under ``jax.jit`` and to reuse
+    across any number of value sets sharing the pattern.
+
+    ``backend`` is a registry *name* (``reference``/``pallas``/``simulator``/
+    custom) — the live :class:`repro.backends.ExecutionBackend` is resolved
+    per call, so plans stay serializable pytrees.  ``aux`` holds whatever the
+    backend's ``prepare`` built for this pattern (e.g. the pallas Gust fiber
+    tables / OP merge schedule).
     """
 
     dataflow: str
     a_layout: CompressionLayout
     b_layout: CompressionLayout
     index_plan: Any                      # IPPlan | StreamPlan
-    gust_tables: Any                     # GustTables | None (pallas gust)
-    merge_plan: Any                      # MergePlan | None (pallas op)
+    aux: Any                             # backend prepare() output (pytree)
     estimate: DataflowEstimate
     fingerprint: str
     shapes: Tuple[int, int, int]         # (m, k, n)
     block_shape: Tuple[int, int, int]
-    use_pallas: bool
-    interpret: bool
+    backend: str                         # registry name
+    interpret: Optional[bool]            # None → REPRO_INTERPRET default
 
     # -- pytree plumbing -------------------------------------------------
     def tree_flatten(self):
-        children = (self.a_layout, self.b_layout, self.index_plan,
-                    self.gust_tables, self.merge_plan)
+        children = (self.a_layout, self.b_layout, self.index_plan, self.aux)
         aux = (self.dataflow, dataclasses.astuple(self.estimate),
                self.fingerprint, self.shapes, self.block_shape,
-               self.use_pallas, self.interpret)
+               self.backend, self.interpret)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        a_layout, b_layout, index_plan, gust_tables, merge_plan = children
-        dataflow, est, fingerprint, shapes, block_shape, use_pallas, \
+        a_layout, b_layout, index_plan, backend_aux = children
+        dataflow, est, fingerprint, shapes, block_shape, backend, \
             interpret = aux
-        return cls(dataflow, a_layout, b_layout, index_plan, gust_tables,
-                   merge_plan, DataflowEstimate(*est), fingerprint, shapes,
-                   block_shape, use_pallas, interpret)
+        return cls(dataflow, a_layout, b_layout, index_plan, backend_aux,
+                   DataflowEstimate(*est), fingerprint, shapes,
+                   block_shape, backend, interpret)
 
     # -- phase-1 byproducts ----------------------------------------------
     @property
     def out_major(self) -> str:
         """Output major order, paper Table 3 (csr for _m, csc for _n)."""
         return df.OUTPUT_MAJOR[self.dataflow]
+
+    @property
+    def use_pallas(self) -> bool:
+        """Back-compat view of the seed API's boolean backend switch."""
+        return self.backend == "pallas"
 
     @property
     def formats(self) -> Tuple[SparseFormat, SparseFormat]:
@@ -438,42 +419,26 @@ class FlexagonPlan:
         """Execute C = A @ B on the planned pattern.  jit-compatible."""
         a_c = self._ingest(a, self.a_layout).unwrap()
         b_c = self._ingest(b, self.b_layout).unwrap()
-        if not self.use_pallas:
-            out = _EXECUTORS[self.dataflow](a_c, b_c, self.index_plan)
-            return out.astype(out_dtype)
-        return self._apply_pallas(a_c, b_c, out_dtype)
+        return get_backend(self.backend).execute(self, a_c, b_c, out_dtype)
 
     __call__ = apply
 
-    def _apply_pallas(self, a_c, b_c, out_dtype) -> jax.Array:
-        from .kernels.gust_spmm import gust_spmm
-        from .kernels.ip_spmm import ip_spmm
-        from .kernels.op_spmm import op_spmm
+    def with_backend(self, backend: BackendArg) -> "FlexagonPlan":
+        """Re-target this plan onto another backend (phase-1 aux rebuilt).
 
-        base = self.dataflow[:-2]
-        if self.dataflow.endswith("_n"):
-            # transpose duality: C = (Bᵀ Aᵀ)ᵀ — the index plan and pallas
-            # aux tables were built for the transposed problem at plan time
-            if base == "ip":
-                at, bt = df._transpose_bcsc_of(a_c), df._transpose_bcsr_of(b_c)
-                return ip_spmm(bt, at, self.index_plan, out_dtype=out_dtype,
-                               interpret=self.interpret).T
-            if base == "op":
-                at, bt = df._transpose_bcsr_of(a_c), df._transpose_bcsc_of(b_c)
-                return op_spmm(bt, at, self.index_plan,
-                               merge=self.merge_plan, out_dtype=out_dtype,
-                               interpret=self.interpret).T
-            at, bt = df._transpose_bcsr_of(a_c), df._transpose_bcsr_of(b_c)
-            return gust_spmm(bt, at, self.gust_tables, out_dtype=out_dtype,
-                             interpret=self.interpret).T
-        if base == "ip":
-            return ip_spmm(a_c, b_c, self.index_plan, out_dtype=out_dtype,
-                           interpret=self.interpret)
-        if base == "op":
-            return op_spmm(a_c, b_c, self.index_plan, merge=self.merge_plan,
-                           out_dtype=out_dtype, interpret=self.interpret)
-        return gust_spmm(a_c, b_c, self.gust_tables, out_dtype=out_dtype,
-                         interpret=self.interpret)
+        Layouts, index plan and dataflow choice are shared — only the
+        substrate-specific ``aux`` is re-prepared.  Handy for parity checks
+        (``plan.with_backend("reference")``) and simulator validation.
+        """
+        be = get_backend(backend)
+        if not be.supports(self.dataflow, *_TABLE3_FORMATS[self.dataflow],
+                           tuple(self.block_shape)):
+            raise ValueError(
+                f"backend {be.name!r} does not support {self.dataflow!r} "
+                f"at block_shape={tuple(self.block_shape)}")
+        plan = dataclasses.replace(self, backend=be.name, aux=None)
+        plan.aux = be.prepare(plan)
+        return plan
 
 
 def _build_index_plan(dataflow: str, a_layout: CompressionLayout,
@@ -503,39 +468,37 @@ def _build_index_plan(dataflow: str, a_layout: CompressionLayout,
     raise ValueError(f"unknown dataflow {dataflow!r}")
 
 
-def _build_pallas_aux(dataflow: str, index_plan, a_layout, b_layout):
-    """Pattern-only pallas schedules: Gust fiber tables / OP merge plan."""
-    from .kernels.gust_spmm import build_gust_tables
-    from .kernels.op_spmm import build_merge_plan
-
-    base = dataflow[:-2]
-    if base == "gust":
-        if dataflow == "gust_m":
-            a_s, b_s = a_layout.skeleton(), b_layout.skeleton()
-        else:
-            a_s = df._transpose_bcsr_of(b_layout.skeleton())
-            b_s = df._transpose_bcsr_of(a_layout.skeleton())
-        return build_gust_tables(a_s, b_s), None
-    if base == "op":
-        # merged into the transposed grid for op_n (executor transposes back)
-        nb = (b_layout.skeleton().grid[1] if dataflow == "op_m"
-              else a_layout.skeleton().grid[0])
-        return None, build_merge_plan(index_plan.ci, index_plan.cj, nb)
-    return None, None
+def _resolve_backend(backend: BackendArg,
+                     use_pallas: Optional[bool]) -> "ExecutionBackend":
+    """``backend=`` names the substrate; the seed API's ``use_pallas`` bool
+    is honoured when no backend is named."""
+    if backend is None:
+        backend = "pallas" if use_pallas else "reference"
+    return get_backend(backend)
 
 
 def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                   dataflow: str = "auto",
                   block_shape: Tuple[int, int, int] = (128, 128, 128),
                   spec: TPUSpec = TPUSpec(),
-                  use_pallas: bool = False,
-                  interpret: bool = True) -> FlexagonPlan:
-    """Phase 1, exactly once: inspect patterns, select, and lay out.
+                  backend: BackendArg = None,
+                  policy: PolicyArg = None,
+                  use_pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> FlexagonPlan:
+    """Phase 1, exactly once: inspect patterns, select, lay out, configure.
 
     ``a_spec``/``b_spec`` describe *patterns*: dense arrays (pattern from
     values), :class:`SparseOperand`, or a bare ``(m, k)`` shape tuple for a
     fully dense operand.  The returned plan executes any values sharing the
     pattern — see :meth:`FlexagonPlan.apply`.
+
+    ``backend`` picks the execution substrate (``"reference"`` default,
+    ``"pallas"``, ``"simulator"``, or a registered custom backend);
+    ``policy`` the selection strategy (``"heuristic"`` default,
+    ``"simulator"``, ``"autotune"``, or a ``SelectionPolicy``).  An explicit
+    ``dataflow=`` pins the choice and bypasses the policy.  ``use_pallas``
+    is the seed API's boolean backend switch, honoured when ``backend`` is
+    not given; ``interpret=None`` defers to ``REPRO_INTERPRET``.
     """
     bm, bk, bn = block_shape
     (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
@@ -543,39 +506,50 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     if k != k2:
         raise ValueError(f"inner dims disagree: A is {(m, k)}, B is {(k2, n)}")
 
+    backend_obj = _resolve_backend(backend, use_pallas)
+    policy_obj = get_policy(policy, dataflow)
+    fingerprint = _fingerprint(occ_a, occ_b, (m, k, n), tuple(block_shape))
     shape = LayerShape(m=m, k=k, n=n,
                        density_a=float(occ_a.mean()),
                        density_b=float(occ_b.mean()),
-                       block=block_shape)
+                       block=tuple(block_shape))
+
+    # capability negotiation: the policy only sees dataflows the backend
+    # declares it can run at this block shape
+    allowed = allowed_dataflows(backend_obj, tuple(block_shape))
+    if not allowed:
+        raise ValueError(f"backend {backend_obj.name!r} supports no dataflow "
+                         f"at block_shape={tuple(block_shape)}")
     if dataflow == "auto":
         PHASE1_COUNTERS["selector"] += 1
-        dataflow = select_dataflow(shape, spec)
     elif dataflow not in df.DATAFLOWS:
         raise ValueError(f"unknown dataflow {dataflow!r}")
+    ctx = SelectionContext(shape=shape, block_shape=tuple(block_shape),
+                           occ_a=occ_a, occ_b=occ_b, fingerprint=fingerprint,
+                           backend=backend_obj, spec=spec, allowed=allowed)
+    dataflow = policy_obj.select(ctx)
 
     fmt_a, fmt_b = _TABLE3_FORMATS[dataflow]
     a_layout = CompressionLayout.from_bitmap(occ_a, (m, k), (bm, bk), fmt_a)
     b_layout = CompressionLayout.from_bitmap(occ_b, (k, n), (bk, bn), fmt_b)
     index_plan = _build_index_plan(dataflow, a_layout, b_layout)
-    gust_tables, merge_plan = (None, None)
-    if use_pallas:
-        gust_tables, merge_plan = _build_pallas_aux(
-            dataflow, index_plan, a_layout, b_layout)
 
-    return FlexagonPlan(
+    plan = FlexagonPlan(
         dataflow=dataflow,
         a_layout=a_layout,
         b_layout=b_layout,
         index_plan=index_plan,
-        gust_tables=gust_tables,
-        merge_plan=merge_plan,
+        aux=None,
         estimate=estimate(shape, dataflow, spec),
-        fingerprint=_fingerprint(occ_a, occ_b, (m, k, n), block_shape),
+        fingerprint=fingerprint,
         shapes=(m, k, n),
         block_shape=tuple(block_shape),
-        use_pallas=use_pallas,
+        backend=backend_obj.name,
         interpret=interpret,
     )
+    # "configure the hardware": backend-specific pattern-only schedules
+    plan.aux = backend_obj.prepare(plan)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -600,17 +574,22 @@ class PlanCache:
     def get(self, a_spec: OperandSpec, b_spec: OperandSpec, *,
             dataflow: str = "auto",
             block_shape: Tuple[int, int, int] = (128, 128, 128),
-            use_pallas: bool = False, interpret: bool = True) -> FlexagonPlan:
+            backend: BackendArg = None, policy: PolicyArg = None,
+            use_pallas: Optional[bool] = None,
+            interpret: Optional[bool] = None) -> FlexagonPlan:
         bm, bk, bn = block_shape
         (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
         (_, n), occ_b = _pattern_of(b_spec, (bk, bn))
+        backend_obj = _resolve_backend(backend, use_pallas)
+        policy_obj = get_policy(policy, dataflow)
         key = (_fingerprint(occ_a, occ_b, (m, k, n), tuple(block_shape)),
-               dataflow, use_pallas, interpret)
+               dataflow, backend_obj.name, policy_obj.cache_key, interpret)
         plan = self._plans.get(key)
         if plan is None:
             plan = flexagon_plan(a_spec, b_spec, dataflow=dataflow,
                                  block_shape=block_shape, spec=self.spec,
-                                 use_pallas=use_pallas, interpret=interpret)
+                                 backend=backend_obj, policy=policy_obj,
+                                 interpret=interpret)
             self._plans[key] = plan
             self.builds += 1
         else:
@@ -648,14 +627,21 @@ class FlexagonPipeline:
                      block_shape: Tuple[int, int, int] = (128, 128, 128),
                      spec: TPUSpec = TPUSpec(),
                      dataflows: Optional[Sequence[str]] = None,
-                     use_pallas: bool = False,
-                     interpret: bool = True) -> "FlexagonPipeline":
+                     backend: BackendArg = None,
+                     policy: PolicyArg = None,
+                     use_pallas: Optional[bool] = None,
+                     interpret: Optional[bool] = None) -> "FlexagonPipeline":
         """Plan a chain ``x → x@W1 → (x@W1)@W2 → …`` (phase 1 once).
 
         ``weights`` are dense arrays or :class:`SparseOperand`; layer i's K
-        dim must equal layer i-1's N dim.
+        dim must equal layer i-1's N dim.  ``policy`` prices the per-layer
+        candidates inside the ``plan_network`` DP (Table 4 conversion
+        penalties stay); ``backend`` is the substrate every layer plan
+        targets.
         """
         bm, bk, bn = block_shape
+        backend_obj = _resolve_backend(backend, use_pallas)
+        policy_obj = get_policy(policy)
         shapes = []
         for i, w in enumerate(weights):
             (kw, nw), occ = _pattern_of(w, (bk, bn))
@@ -667,14 +653,16 @@ class FlexagonPipeline:
                                      block=block_shape))
         if dataflows is None:
             PHASE1_COUNTERS["selector"] += 1
-            dataflows = plan_network(shapes, spec)
+            dataflows = plan_network(
+                shapes, spec,
+                layer_cost=lambda l, d: policy_obj.layer_cost(l, d, spec))
         dataflows = list(dataflows)
 
         plans, packed = [], []
         for i, (w, s, d) in enumerate(zip(weights, shapes, dataflows)):
             plan = flexagon_plan((tokens, s.k), w, dataflow=d,
                                  block_shape=block_shape, spec=spec,
-                                 use_pallas=use_pallas, interpret=interpret)
+                                 backend=backend_obj, interpret=interpret)
             plans.append(plan)
             packed.append(plan.pack_b(w))
         conversions = [False] + [

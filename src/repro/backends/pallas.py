@@ -1,0 +1,113 @@
+"""``pallas`` backend — the TPU kernels behind the plan API.
+
+All Pallas dispatch lives here (kernels are imported nowhere else outside
+:mod:`repro.kernels` itself):
+
+- :meth:`PallasBackend.prepare` builds the pattern-only kernel schedules the
+  index plan alone doesn't cover — Gust fiber tables (``GustTables``) and the
+  OP merge schedule (``MergePlan``) — once, at plan time;
+- :meth:`PallasBackend.execute` dispatches ``ip_spmm``/``op_spmm``/
+  ``gust_spmm``.  N-stationary variants run through the transpose duality
+  ``C = (Bᵀ Aᵀ)ᵀ`` with *jnp* transposes (``swapaxes`` on the block data —
+  device-side, never a host round trip), against index plans that phase 1
+  built for the transposed problem;
+- interpret mode resolves in exactly one place: an explicit per-plan
+  ``interpret=`` wins, then the backend instance's setting, then the global
+  ``REPRO_INTERPRET`` knob (:mod:`repro.config`).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..config import resolve_interpret
+from ..core import dataflows as df
+from .base import TABLE3_FORMATS, BackendCapability, ExecutionBackend
+
+__all__ = ["PallasBackend"]
+
+
+class PallasBackend(ExecutionBackend):
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        self.interpret = interpret
+
+    def capabilities(self) -> BackendCapability:
+        # All six dataflows (N variants via the transpose duality).  Blocks
+        # are unconstrained under interpret mode; a compiled TPU run wants
+        # MXU-aligned (128-multiple) blocks, enforced by Mosaic itself.
+        return BackendCapability(
+            dataflows=tuple(df.DATAFLOWS),
+            formats=tuple(set(TABLE3_FORMATS.values())),
+            block_multiple=1,
+        )
+
+    def _interpret(self, plan) -> bool:
+        explicit = plan.interpret if plan.interpret is not None \
+            else self.interpret
+        return resolve_interpret(explicit)
+
+    # -- phase 1 ---------------------------------------------------------
+    def prepare(self, plan) -> Dict[str, Any]:
+        """Pattern-only pallas schedules: Gust fiber tables / OP merge plan.
+
+        N-stationary schedules are built for the transposed problem, matching
+        how :meth:`execute` runs them.
+        """
+        from ..kernels.gust_spmm import build_gust_tables
+        from ..kernels.op_spmm import build_merge_plan
+
+        base = plan.dataflow[:-2]
+        a_layout, b_layout = plan.a_layout, plan.b_layout
+        if base == "gust":
+            if plan.dataflow == "gust_m":
+                a_s, b_s = a_layout.skeleton(), b_layout.skeleton()
+            else:
+                a_s = df._transpose_bcsr_of(b_layout.skeleton())
+                b_s = df._transpose_bcsr_of(a_layout.skeleton())
+            return {"gust_tables": build_gust_tables(a_s, b_s)}
+        if base == "op":
+            # merged into the transposed grid for op_n (execute transposes
+            # the result back)
+            nb = (b_layout.skeleton().grid[1] if plan.dataflow == "op_m"
+                  else a_layout.skeleton().grid[0])
+            return {"merge_plan": build_merge_plan(plan.index_plan.ci,
+                                                   plan.index_plan.cj, nb)}
+        return {}
+
+    # -- phase 2 ---------------------------------------------------------
+    def execute(self, plan, a, b, out_dtype) -> jax.Array:
+        from ..kernels.gust_spmm import gust_spmm
+        from ..kernels.ip_spmm import ip_spmm
+        from ..kernels.op_spmm import op_spmm
+
+        interpret = self._interpret(plan)
+        aux = plan.aux or {}
+        gust_tables = aux.get("gust_tables")
+        merge_plan = aux.get("merge_plan")
+
+        base = plan.dataflow[:-2]
+        if plan.dataflow.endswith("_n"):
+            # transpose duality: C = (Bᵀ Aᵀ)ᵀ — jnp swapaxes only, and the
+            # index plan / aux tables were built transposed at plan time
+            if base == "ip":
+                at, bt = df._transpose_bcsc_of(a), df._transpose_bcsr_of(b)
+                return ip_spmm(bt, at, plan.index_plan, out_dtype=out_dtype,
+                               interpret=interpret).T
+            if base == "op":
+                at, bt = df._transpose_bcsr_of(a), df._transpose_bcsc_of(b)
+                return op_spmm(bt, at, plan.index_plan, merge=merge_plan,
+                               out_dtype=out_dtype, interpret=interpret).T
+            at, bt = df._transpose_bcsr_of(a), df._transpose_bcsr_of(b)
+            return gust_spmm(bt, at, gust_tables, out_dtype=out_dtype,
+                             interpret=interpret).T
+        if base == "ip":
+            return ip_spmm(a, b, plan.index_plan, out_dtype=out_dtype,
+                           interpret=interpret)
+        if base == "op":
+            return op_spmm(a, b, plan.index_plan, merge=merge_plan,
+                           out_dtype=out_dtype, interpret=interpret)
+        return gust_spmm(a, b, gust_tables, out_dtype=out_dtype,
+                         interpret=interpret)

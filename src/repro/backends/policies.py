@@ -1,0 +1,279 @@
+"""Dataflow ``SelectionPolicy`` — the swappable half of phase 1.
+
+The paper's mapper/compiler estimates every dataflow's cost and picks one.
+Misam (arXiv 2406.10166) shows the *picking* is itself a policy worth
+swapping — heuristic vs. learned vs. measured.  This module is that seam:
+
+- :class:`HeuristicPolicy` — the analytical roofline estimate
+  (:func:`repro.core.selector.select_dataflow`), the fast host-side default;
+- :class:`SimulatorPolicy` — pick by simulated cycles on the cycle-level
+  accelerator models — the paper's phase 1 proper;
+- :class:`AutotunePolicy`  — measure every candidate dataflow on-device at
+  plan time and pick the fastest, cached by pattern fingerprint (plan once,
+  measure once, reuse forever);
+- :class:`FixedPolicy`     — always the given dataflow (what an explicit
+  ``dataflow="ip_m"`` argument resolves to).
+
+A policy sees one :class:`SelectionContext` (shape features, occupancy
+bitmaps, fingerprint, the target backend) and returns a dataflow name from
+``ctx.allowed`` — the dataflows the backend's capability declaration admits.
+``layer_cost`` is the same oracle exposed per (layer, dataflow) for the
+network-level DP (:func:`repro.core.selector.plan_network`).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import hashlib
+import time
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core import dataflows as df
+from ..core.selector import LayerShape, TPUSpec, estimate, select_dataflow
+from .base import ExecutionBackend, allowed_dataflows, get_backend
+
+__all__ = [
+    "SelectionContext",
+    "SelectionPolicy",
+    "HeuristicPolicy",
+    "SimulatorPolicy",
+    "AutotunePolicy",
+    "FixedPolicy",
+    "get_policy",
+]
+
+
+@dataclasses.dataclass
+class SelectionContext:
+    """Everything phase 1 knows when it asks a policy to choose.
+
+    ``occ_a``/``occ_b`` are block-occupancy bitmaps (the pattern itself, for
+    policies that measure); ``allowed`` is pre-negotiated against the
+    backend's capability declaration.
+    """
+
+    shape: LayerShape
+    block_shape: Tuple[int, int, int]
+    occ_a: np.ndarray
+    occ_b: np.ndarray
+    fingerprint: str
+    backend: ExecutionBackend
+    spec: TPUSpec
+    allowed: Tuple[str, ...]
+
+
+class SelectionPolicy(abc.ABC):
+    """One dataflow-selection strategy (see module docstring)."""
+
+    name: str = "abstract"
+
+    #: key under which a :class:`repro.api.PlanCache` may file plans built
+    #: with this policy; stateful policies override (e.g. a fixed dataflow).
+    @property
+    def cache_key(self) -> str:
+        return self.name
+
+    @abc.abstractmethod
+    def select(self, ctx: SelectionContext) -> str:
+        """Pick one dataflow from ``ctx.allowed``."""
+
+    def layer_cost(self, shape: LayerShape, dataflow: str,
+                   spec: Optional[TPUSpec] = None) -> float:
+        """Per-(layer, dataflow) cost in seconds for the network DP."""
+        return estimate(shape, dataflow, spec or TPUSpec()).time_s
+
+    # -- conveniences ----------------------------------------------------
+    def select_for_shape(self, shape: LayerShape, *,
+                         backend: Union[str, ExecutionBackend] = "reference",
+                         spec: TPUSpec = TPUSpec()) -> str:
+        """Select for shape features alone (dense-pattern context).
+
+        For callers that have no concrete pattern — e.g. MoE dispatch
+        planning, where the routing pattern only exists at run time.
+        """
+        be = get_backend(backend)
+        bm, bk, bn = shape.block
+        occ_a = np.ones((-(-shape.m // bm), -(-shape.k // bk)), dtype=bool)
+        occ_b = np.ones((-(-shape.k // bk), -(-shape.n // bn)), dtype=bool)
+        allowed = allowed_dataflows(be, tuple(shape.block))
+        ctx = SelectionContext(
+            shape=shape, block_shape=tuple(shape.block), occ_a=occ_a,
+            occ_b=occ_b,
+            fingerprint=f"shape:{shape.m}x{shape.k}x{shape.n}"
+                        f":{shape.density_a:.4f}:{shape.density_b:.4f}",
+            backend=be, spec=spec, allowed=allowed)
+        return self.select(ctx)
+
+
+class HeuristicPolicy(SelectionPolicy):
+    """Today's analytical roofline estimate (paper §5.2 traffic formulas)."""
+
+    name = "heuristic"
+
+    def select(self, ctx: SelectionContext) -> str:
+        return select_dataflow(ctx.shape, ctx.spec, allowed=ctx.allowed)
+
+
+class SimulatorPolicy(SelectionPolicy):
+    """Pick by simulated cycles — the paper's phase 1 proper.
+
+    Deterministic for a fixed fingerprint: the cycle models price a
+    deterministic sampled pattern; ties break by dataflow name.
+    """
+
+    name = "simulator"
+
+    def __init__(self, backend: Union[str, ExecutionBackend] = "simulator"):
+        self._sim = backend
+
+    def _oracle(self) -> ExecutionBackend:
+        return get_backend(self._sim)
+
+    def select(self, ctx: SelectionContext) -> str:
+        sim = self._oracle()
+        return min(ctx.allowed,
+                   key=lambda d: (sim.cost(ctx.shape, d, ctx.spec), d))
+
+    def layer_cost(self, shape: LayerShape, dataflow: str,
+                   spec: Optional[TPUSpec] = None) -> float:
+        return self._oracle().cost(shape, dataflow, spec)
+
+
+class AutotunePolicy(SelectionPolicy):
+    """Measure every candidate dataflow on-device at plan time.
+
+    For each new pattern fingerprint the policy synthesizes values on the
+    pattern, builds a throwaway fixed-dataflow plan per candidate on the
+    *target* backend, times ``plan.apply`` wall-clock, and picks the fastest.
+    Results are cached by ``(fingerprint, backend, block_shape)`` so a
+    serving loop pays the sweep once per pattern — and repeat selections are
+    deterministic by construction.
+    """
+
+    name = "autotune"
+
+    def __init__(self, reps: int = 2):
+        self.reps = reps
+        self._cache: Dict[tuple, str] = {}
+        self.measurements = 0      # sweep count, for tests/telemetry
+
+    def select(self, ctx: SelectionContext) -> str:
+        key = (ctx.fingerprint, ctx.backend.name, ctx.block_shape)
+        hit = self._cache.get(key)
+        if hit is not None and hit in ctx.allowed:
+            return hit
+        choice = self._measure(ctx)
+        self._cache[key] = choice
+        return choice
+
+    def _measure(self, ctx: SelectionContext) -> str:
+        from ..api import flexagon_plan  # lazy: api imports this module
+
+        self.measurements += 1
+        m, k = ctx.shape.m, ctx.shape.k
+        n = ctx.shape.n
+        bm, bk, bn = ctx.block_shape
+        seed = int(hashlib.sha1(ctx.fingerprint.encode()).hexdigest()[:8], 16)
+        rng = np.random.default_rng(seed)
+        a = _values_on_pattern(rng, ctx.occ_a, (m, k), (bm, bk))
+        b = _values_on_pattern(rng, ctx.occ_b, (k, n), (bk, bn))
+        timings = {}
+        for d in ctx.allowed:
+            plan = flexagon_plan(a, b, dataflow=d,
+                                 block_shape=ctx.block_shape, spec=ctx.spec,
+                                 backend=ctx.backend)
+            a_c, b_c = plan.pack_a(a), plan.pack_b(b)
+            np.asarray(plan.apply(a_c, b_c))        # warmup / compile
+            best = np.inf
+            for _ in range(self.reps):
+                t0 = time.perf_counter()
+                np.asarray(plan.apply(a_c, b_c))    # block until ready
+                best = min(best, time.perf_counter() - t0)
+            timings[d] = best
+        return min(ctx.allowed, key=lambda d: (timings[d], d))
+
+    def layer_cost(self, shape: LayerShape, dataflow: str,
+                   spec: Optional[TPUSpec] = None) -> float:
+        # the network DP sees shape features only (no pattern to measure);
+        # fall back to the analytical estimate
+        return estimate(shape, dataflow, spec or TPUSpec()).time_s
+
+
+def _values_on_pattern(rng: np.random.Generator, occ: np.ndarray,
+                       shape: Tuple[int, int],
+                       block_shape: Tuple[int, int]) -> np.ndarray:
+    """Dense values whose block occupancy equals ``occ`` (measurement input)."""
+    bm, bk = block_shape
+    dense = np.zeros((occ.shape[0] * bm, occ.shape[1] * bk), np.float32)
+    rows, cols = np.nonzero(occ)
+    for r, c in zip(rows, cols):
+        dense[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] = \
+            rng.standard_normal((bm, bk)).astype(np.float32) + 0.1
+    return dense[: shape[0], : shape[1]]
+
+
+class FixedPolicy(SelectionPolicy):
+    """Always the given dataflow (an explicit ``dataflow=`` pin)."""
+
+    name = "fixed"
+
+    def __init__(self, dataflow: str):
+        if dataflow not in df.DATAFLOWS:
+            raise ValueError(f"unknown dataflow {dataflow!r}; "
+                             f"expected one of {df.DATAFLOWS}")
+        self.dataflow = dataflow
+
+    @property
+    def cache_key(self) -> str:
+        return f"fixed:{self.dataflow}"
+
+    def select(self, ctx: SelectionContext) -> str:
+        if self.dataflow not in ctx.allowed:
+            raise ValueError(
+                f"backend {ctx.backend.name!r} does not support "
+                f"{self.dataflow!r} at block_shape={ctx.block_shape}")
+        return self.dataflow
+
+    def layer_cost(self, shape: LayerShape, dataflow: str,
+                   spec: Optional[TPUSpec] = None) -> float:
+        return 0.0 if dataflow == self.dataflow else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Named-policy resolution (singletons, so AutotunePolicy's cache persists)
+# ---------------------------------------------------------------------------
+
+_NAMED: Dict[str, SelectionPolicy] = {}
+
+
+def get_policy(policy: Union[str, SelectionPolicy, None],
+               dataflow: str = "auto") -> SelectionPolicy:
+    """Resolve ``policy=`` / ``dataflow=`` arguments to one policy instance.
+
+    - an explicit non-"auto" ``dataflow`` pins a :class:`FixedPolicy`
+      (and wins over ``policy``, matching the pre-seam API);
+    - ``policy`` may be a name ("heuristic" / "simulator" / "autotune" — or a
+      dataflow name, shorthand for a fixed pin) or an instance;
+    - neither given → :class:`HeuristicPolicy`.
+    """
+    if dataflow != "auto":
+        return FixedPolicy(dataflow)
+    if policy is None:
+        policy = "heuristic"
+    if isinstance(policy, SelectionPolicy):
+        return policy
+    if policy in df.DATAFLOWS:
+        return FixedPolicy(policy)
+    if policy not in ("heuristic", "simulator", "autotune"):
+        raise KeyError(f"unknown policy {policy!r}; expected "
+                       "'heuristic', 'simulator', 'autotune', a dataflow "
+                       "name, or a SelectionPolicy instance")
+    inst = _NAMED.get(policy)
+    if inst is None:
+        inst = {"heuristic": HeuristicPolicy,
+                "simulator": SimulatorPolicy,
+                "autotune": AutotunePolicy}[policy]()
+        _NAMED[policy] = inst
+    return inst

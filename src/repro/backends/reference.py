@@ -1,0 +1,36 @@
+"""``reference`` backend — the pure-jnp dataflow executors.
+
+Wraps :mod:`repro.core.dataflows`: each of the six dataflows runs through its
+JAX reference executor on the plan's frozen index plan (``IPPlan`` /
+``StreamPlan``).  No extra phase-1 aux is needed — the index plan *is* the
+schedule.  This backend is the numerical oracle the others are validated
+against, and the default execution substrate.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core import dataflows as df
+from .base import TABLE3_FORMATS, BackendCapability, ExecutionBackend
+
+__all__ = ["ReferenceBackend", "TABLE3_FORMATS"]
+
+_EXECUTORS = {
+    "ip_m": df.ip_m, "op_m": df.op_m, "gust_m": df.gust_m,
+    "ip_n": df.ip_n, "op_n": df.op_n, "gust_n": df.gust_n,
+}
+
+
+class ReferenceBackend(ExecutionBackend):
+    name = "reference"
+
+    def capabilities(self) -> BackendCapability:
+        return BackendCapability(
+            dataflows=tuple(df.DATAFLOWS),
+            formats=tuple(set(TABLE3_FORMATS.values())),
+            block_multiple=1,
+        )
+
+    def execute(self, plan, a, b, out_dtype) -> jax.Array:
+        out = _EXECUTORS[plan.dataflow](a, b, plan.index_plan)
+        return out.astype(out_dtype)

@@ -1,0 +1,38 @@
+"""Process-wide execution knobs.
+
+One place for defaults that used to be scattered per-function keywords.
+
+``REPRO_INTERPRET`` — Pallas interpret-mode default for every kernel entry
+point (``ip_spmm``/``op_spmm``/``gust_spmm``/``moe_gmm.gmm``) and for plans
+executed through the ``pallas`` backend.  Unset, kernels run in interpret
+mode (CPU-safe validation, the development default); set ``REPRO_INTERPRET=0``
+on a real TPU to compile natively.  An explicit ``interpret=`` argument at any
+call site still wins.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["interpret_default", "resolve_interpret"]
+
+_TRUE = {"1", "true", "yes", "on"}
+_FALSE = {"0", "false", "no", "off"}
+
+
+def interpret_default() -> bool:
+    """Global Pallas interpret-mode default (``REPRO_INTERPRET``).
+
+    Read at call time, not import time, so tests and launchers can flip the
+    environment without reloading modules.
+    """
+    raw = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if raw in _TRUE:
+        return True
+    if raw in _FALSE:
+        return False
+    return True
+
+
+def resolve_interpret(explicit: bool | None = None) -> bool:
+    """An explicit per-call value wins; ``None`` defers to the global knob."""
+    return interpret_default() if explicit is None else bool(explicit)

@@ -21,13 +21,15 @@ column (CSC); an *element* is one (coordinate, value) duple.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import enum
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "SparseFormat",
     "BlockCSR",
     "BlockCSC",
     "CSR",
@@ -39,6 +41,33 @@ __all__ = [
     "random_sparse_dense",
     "block_occupancy",
 ]
+
+
+class SparseFormat(enum.Enum):
+    """The four storage formats behind one constructor surface.
+
+    Block formats feed the dataflow executors / Pallas kernels; scalar
+    formats are the paper-exact fibers consumed by the cycle-level simulator.
+    """
+
+    BCSR = "bcsr"
+    BCSC = "bcsc"
+    CSR = "csr"
+    CSC = "csc"
+
+    @classmethod
+    def of(cls, fmt: Union[str, "SparseFormat"]) -> "SparseFormat":
+        return fmt if isinstance(fmt, cls) else cls(str(fmt).lower())
+
+    @property
+    def is_block(self) -> bool:
+        return self in (SparseFormat.BCSR, SparseFormat.BCSC)
+
+    @property
+    def major(self) -> str:
+        """Fiber major order: rows ("csr") or columns ("csc")."""
+        return "csr" if self in (SparseFormat.BCSR, SparseFormat.CSR) \
+            else "csc"
 
 
 def _ceil_div(a: int, b: int) -> int:

@@ -225,18 +225,26 @@ def transition_needs_conversion(prev: str, nxt: str) -> bool:
 
 
 def plan_network(layers: Sequence[LayerShape], spec: TPUSpec = TPUSpec(),
-                 conversion_cost_s: float | None = None) -> List[str]:
+                 conversion_cost_s: float | None = None,
+                 layer_cost=None) -> List[str]:
     """Choose a per-layer dataflow sequence minimizing total time including
     explicit-conversion penalties (dynamic program over Table 4 legality).
 
     This is the inter-layer mechanism of contribution (2): the planner prefers
     sequences whose produced format feeds the next layer directly.
+
+    ``layer_cost(shape, dataflow) -> seconds`` swaps the per-layer oracle —
+    the seam :class:`repro.backends.SelectionPolicy` implementations plug
+    into (simulated cycles, measurements, …).  Default: the analytical
+    roofline estimate on ``spec``.
     """
     from .dataflows import DATAFLOWS
 
     if not layers:
         return []
-    est = [estimate_all(l, spec) for l in layers]
+    if layer_cost is None:
+        layer_cost = lambda l, d: estimate(l, d, spec).time_s
+    est = [{d: layer_cost(l, d) for d in DATAFLOWS} for l in layers]
 
     def conv_cost(i: int) -> float:
         if conversion_cost_s is not None:
@@ -247,14 +255,14 @@ def plan_network(layers: Sequence[LayerShape], spec: TPUSpec = TPUSpec(),
         return 2.0 * act_bytes / spec.hbm_bw
 
     # DP over (layer, dataflow)
-    cost = {df: est[0][df].time_s for df in DATAFLOWS}
+    cost = {df: est[0][df] for df in DATAFLOWS}
     back: List[Dict[str, str]] = []
     for i in range(1, len(layers)):
         nxt_cost, nxt_back = {}, {}
         for df in DATAFLOWS:
             best_prev, best = None, float("inf")
             for pdf in DATAFLOWS:
-                c = cost[pdf] + est[i][df].time_s
+                c = cost[pdf] + est[i][df]
                 if transition_needs_conversion(pdf, df):
                     c += conv_cost(i)
                 if c < best:

@@ -2,10 +2,13 @@
 
 - ``ip_spmm`` / ``op_spmm`` / ``gust_spmm`` — the three SpMSpM dataflows on
   one substrate (``common.py`` = MRN analogue), validated in interpret mode.
+  Plan-level dispatch lives in :mod:`repro.backends.pallas` (the ``pallas``
+  execution backend), which also builds their phase-1 schedules
+  (``GustTables``, ``MergePlan``) once per pattern; interpret-mode defaults
+  resolve through :mod:`repro.config` (``REPRO_INTERPRET``).
 - ``moe_gmm.gmm`` — grouped matmul (Gustavson-as-deployed for MoE).
-- ``ops.flexagon_spmm`` — one-shot convenience shim; the plan-once entry
-  point is :func:`repro.api.flexagon_plan` (phase-1 schedules for these
-  kernels — ``GustTables``, ``MergePlan`` — are built there once).
+- ``ops.flexagon_spmm`` — deprecated one-shot shim (warns); the plan-once
+  entry point is :func:`repro.api.flexagon_plan`.
 - ``ref.py`` — pure-jnp oracles.
 """
 from .ip_spmm import ip_spmm          # noqa: F401

@@ -29,6 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 import dataclasses
 
+from ..config import resolve_interpret
 from ..core.formats import BlockCSR
 from .common import compiler_params, grid_spec
 
@@ -121,12 +122,15 @@ def _kernel(a_slots_ref, a_cols_ref, a_len_ref, b_slots_ref, b_cols_ref,
 
 
 def gust_spmm(a: BlockCSR, b: BlockCSR, tables: GustTables | None = None, *,
-              out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+              out_dtype=jnp.float32, interpret: bool | None = None
+              ) -> jax.Array:
     """C = A @ B via Gustavson's dataflow.  Returns dense C (M, N).
 
     ``tables`` (from :func:`build_gust_tables`) carries the phase-1 fiber
     tables; omitted, they are rebuilt host-side from the operand structure.
+    ``interpret=None`` defers to the global knob (``REPRO_INTERPRET``).
     """
+    interpret = resolve_interpret(interpret)
     mb, kb = a.grid
     kb2, nb = b.grid
     assert kb == kb2

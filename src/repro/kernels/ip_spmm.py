@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from ..config import resolve_interpret
 from ..core.dataflows import IPPlan, build_ip_plan
 from ..core.formats import BlockCSR, BlockCSC
 from .common import accumulate_or_flush, compiler_params, grid_spec
@@ -48,8 +49,12 @@ def _kernel(pair_a_ref, pair_b_ref, npairs_ref, a_ref, b_ref, o_ref, acc_ref,
 
 
 def ip_spmm(a: BlockCSR, b: BlockCSC, plan: IPPlan | None = None, *,
-            out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
-    """C = A @ B via the Inner-Product dataflow.  Returns dense C (M, N)."""
+            out_dtype=jnp.float32, interpret: bool | None = None) -> jax.Array:
+    """C = A @ B via the Inner-Product dataflow.  Returns dense C (M, N).
+
+    ``interpret=None`` defers to the global knob (``REPRO_INTERPRET``).
+    """
+    interpret = resolve_interpret(interpret)
     if plan is None:
         plan = build_ip_plan(a, b)
     mb, kb = a.grid

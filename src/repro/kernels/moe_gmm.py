@@ -22,6 +22,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..config import resolve_interpret
 from .common import accumulate_or_flush, compiler_params, grid_spec
 
 __all__ = ["gmm", "pad_groups"]
@@ -39,12 +40,13 @@ def _kernel(gid_ref, x_ref, w_ref, o_ref, acc_ref, *, kt: int):
 
 def gmm(x: jax.Array, w: jax.Array, group_ids: jax.Array, *,
         bm: int = 128, bk: int = 128, bn: int = 128,
-        out_dtype=None, interpret: bool = True) -> jax.Array:
+        out_dtype=None, interpret: bool | None = None) -> jax.Array:
     """Grouped matmul: out[t*bm:(t+1)*bm] = x[t*bm:(t+1)*bm] @ w[group_ids[t]].
 
     Requires M % bm == K % bk == N % bn == 0 (callers pad; see
-    :func:`pad_groups`).
+    :func:`pad_groups`).  ``interpret=None`` defers to ``REPRO_INTERPRET``.
     """
+    interpret = resolve_interpret(interpret)
     m, kdim = x.shape
     g, kdim2, n = w.shape
     assert kdim == kdim2, (x.shape, w.shape)

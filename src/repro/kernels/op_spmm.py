@@ -32,6 +32,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..config import resolve_interpret
 from ..core.dataflows import StreamPlan, build_op_plan
 from ..core.formats import BlockCSR, BlockCSC
 from .common import accumulate_or_flush, compiler_params, grid_spec
@@ -107,7 +108,8 @@ def _merge_kernel(run_id_ref, is_first_ref, is_last_ref, psum_ref, o_ref,
 
 def merge_psums(psums: jax.Array, ci: np.ndarray, cj: np.ndarray,
                 out_grid: Tuple[int, int], *, merge: MergePlan | None = None,
-                out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+                out_dtype=jnp.float32,
+                interpret: bool | None = None) -> jax.Array:
     """Merging phase: combine a psum block stream by destination coordinate.
 
     psums: (W, bm, bn) fp32 psum blocks; ci/cj: (W,) destination block coords
@@ -115,6 +117,7 @@ def merge_psums(psums: jax.Array, ci: np.ndarray, cj: np.ndarray,
     phase-1 schedule; omitted, it is rebuilt here.  Returns dense C of shape
     (Mb*bm, Nb*bn).
     """
+    interpret = resolve_interpret(interpret)
     w_total, bm, bn = psums.shape
     mb, nb = out_grid
     if merge is None:
@@ -153,8 +156,12 @@ def merge_psums(psums: jax.Array, ci: np.ndarray, cj: np.ndarray,
 
 def op_spmm(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None, *,
             merge: MergePlan | None = None, out_dtype=jnp.float32,
-            interpret: bool = True) -> jax.Array:
-    """C = A @ B via the Outer-Product dataflow.  Returns dense C (M, N)."""
+            interpret: bool | None = None) -> jax.Array:
+    """C = A @ B via the Outer-Product dataflow.  Returns dense C (M, N).
+
+    ``interpret=None`` defers to the global knob (``REPRO_INTERPRET``).
+    """
+    interpret = resolve_interpret(interpret)
     if plan is None:
         plan = build_op_plan(a, b)
     mb = a.grid[0]

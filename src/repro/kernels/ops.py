@@ -1,33 +1,32 @@
-"""Public jit'd entry points for the Flexagon kernels.
+"""Public one-shot entry points over the plan API.
 
-``flexagon_spmm`` remains as a one-shot convenience shim: it runs phase 1
-(:func:`repro.api.flexagon_plan`) and phase 2 (``plan.apply``) back to back
-on every call.
+Both functions here run phase 1 (:func:`repro.api.flexagon_plan`) and phase 2
+(``plan.apply``) back to back on every call, routed through the backend
+registry (:mod:`repro.backends`) — no kernel is dispatched from this module.
+N-stationary variants execute through the pallas backend's transpose duality
+with *jnp* transposes: the operand value path never round-trips through host
+numpy.
 
 .. deprecated::
     For anything called more than once per sparsity pattern — serving loops,
     per-layer inference, benchmarks — use the plan-once API instead::
 
-        plan = flexagon_plan(a, b, block_shape=..., spec=...)
+        plan = flexagon_plan(a, b, block_shape=..., backend=...)
         c = plan.apply(a, b)          # reusable, jit-compatible
 
-    The shim re-inspects occupancy, re-runs the selector and rebuilds index
-    plans per call, exactly the host-side cost the plan API amortizes.
+    The shims re-inspect occupancy, re-run the selection policy and rebuild
+    index plans per call, exactly the host-side cost the plan API amortizes.
+    ``flexagon_spmm`` emits a :class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
-from typing import Literal
+import warnings
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core import dataflows as df
-from ..core.formats import dense_to_bcsr, dense_to_bcsc
 from ..core.selector import TPUSpec
-from .gust_spmm import gust_spmm
-from .ip_spmm import ip_spmm
-from .op_spmm import op_spmm
 
 __all__ = ["flexagon_spmm", "spmm_with_dataflow"]
 
@@ -36,55 +35,49 @@ Dataflow = Literal["ip_m", "op_m", "gust_m", "ip_n", "op_n", "gust_n", "auto"]
 
 def spmm_with_dataflow(a_dense, b_dense, dataflow: str,
                        block_shape=(128, 128, 128), *,
-                       use_pallas: bool = True, interpret: bool = True,
+                       use_pallas: bool = True,
+                       interpret: Optional[bool] = None,
+                       backend=None,
                        out_dtype=jnp.float32) -> jax.Array:
     """Run one specific dataflow on dense inputs (compression included).
 
-    N-stationary variants execute through the transpose duality on the Pallas
-    path (C = (Bᵀ Aᵀ)ᵀ), matching the paper's observation that N variants
+    One-shot convenience over ``flexagon_plan(..., dataflow=...)``: phase 1
+    per call.  ``backend`` overrides the ``use_pallas`` boolean; N-stationary
+    variants run via the transpose duality (C = (Bᵀ Aᵀ)ᵀ) inside the backend,
+    as jnp ops on device — matching the paper's observation that N variants
     run "in the same manner by exchanging matrices A and B".
-    """
-    bm, bk, bn = block_shape
-    if not use_pallas:
-        out = df.run_dataflow(dataflow, a_dense, b_dense, (bm, bk, bn))
-        return out.astype(out_dtype)
-
-    if dataflow.endswith("_n"):
-        base = dataflow[:-2] + "_m"
-        out = spmm_with_dataflow(
-            np.asarray(b_dense).T, np.asarray(a_dense).T, base,
-            (bn, bk, bm), use_pallas=True, interpret=interpret,
-            out_dtype=out_dtype)
-        return out.T
-
-    if dataflow == "ip_m":
-        a = dense_to_bcsr(a_dense, (bm, bk))
-        b = dense_to_bcsc(b_dense, (bk, bn))
-        return ip_spmm(a, b, out_dtype=out_dtype, interpret=interpret)
-    if dataflow == "op_m":
-        a = dense_to_bcsc(a_dense, (bm, bk))
-        b = dense_to_bcsr(b_dense, (bk, bn))
-        return op_spmm(a, b, out_dtype=out_dtype, interpret=interpret)
-    if dataflow == "gust_m":
-        a = dense_to_bcsr(a_dense, (bm, bk))
-        b = dense_to_bcsr(b_dense, (bk, bn))
-        return gust_spmm(a, b, out_dtype=out_dtype, interpret=interpret)
-    raise ValueError(f"unknown dataflow {dataflow!r}")
-
-
-def flexagon_spmm(a_dense, b_dense, *, dataflow: Dataflow = "auto",
-                  block_shape=(128, 128, 128), spec: TPUSpec = TPUSpec(),
-                  use_pallas: bool = True, interpret: bool = True,
-                  out_dtype=jnp.float32):
-    """SpMSpM with per-operation dataflow selection (the paper's headline).
-
-    Returns ``(C, chosen_dataflow)``.  Deprecated convenience shim over the
-    plan-once API — see the module docstring; prefer
-    :func:`repro.api.flexagon_plan` whenever a pattern repeats.
     """
     from ..api import flexagon_plan
 
     plan = flexagon_plan(a_dense, b_dense, dataflow=dataflow,
-                         block_shape=block_shape, spec=spec,
+                         block_shape=tuple(block_shape), backend=backend,
+                         use_pallas=use_pallas, interpret=interpret)
+    return plan.apply(a_dense, b_dense, out_dtype=out_dtype)
+
+
+def flexagon_spmm(a_dense, b_dense, *, dataflow: Dataflow = "auto",
+                  block_shape=(128, 128, 128), spec: TPUSpec = TPUSpec(),
+                  use_pallas: bool = True,
+                  interpret: Optional[bool] = None,
+                  backend=None, policy=None,
+                  out_dtype=jnp.float32):
+    """SpMSpM with per-operation dataflow selection (the paper's headline).
+
+    Returns ``(C, chosen_dataflow)``.
+
+    .. deprecated::
+        One-shot shim over the plan-once API — see the module docstring;
+        prefer :func:`repro.api.flexagon_plan` whenever a pattern repeats.
+    """
+    warnings.warn(
+        "flexagon_spmm re-plans on every call; use "
+        "repro.api.flexagon_plan(...) once and plan.apply(...) per "
+        "execution instead",
+        DeprecationWarning, stacklevel=2)
+    from ..api import flexagon_plan
+
+    plan = flexagon_plan(a_dense, b_dense, dataflow=dataflow,
+                         block_shape=tuple(block_shape), spec=spec,
+                         backend=backend, policy=policy,
                          use_pallas=use_pallas, interpret=interpret)
     return plan.apply(a_dense, b_dense, out_dtype=out_dtype), plan.dataflow

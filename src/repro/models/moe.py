@@ -32,7 +32,7 @@ from .layers import dense_init
 from ..sharding.act import shard
 
 __all__ = ["moe_init", "moe_apply", "select_moe_strategy", "MoEPlan",
-           "plan_moe"]
+           "plan_moe", "STRATEGY_OF_DATAFLOW"]
 
 
 def moe_init(key, cfg):
@@ -212,12 +212,35 @@ class MoEPlan:
     tokens: int
 
 
-def plan_moe(cfg, tokens: int, *, strategy: Optional[str] = None) -> MoEPlan:
-    """Run the MoE strategy selector once for this token shape."""
+#: Each MoE dispatch strategy is one of the paper's dataflows deployed
+#: (module docstring / DESIGN.md §5) — the mapping a dataflow-selection
+#: policy goes through when it plans MoE dispatch.
+STRATEGY_OF_DATAFLOW = {"ip": "einsum", "op": "scatter", "gust": "sort"}
+
+
+def plan_moe(cfg, tokens: int, *, strategy: Optional[str] = None,
+             policy=None) -> MoEPlan:
+    """Run the MoE strategy selector once for this token shape.
+
+    ``policy`` (a :class:`repro.backends.SelectionPolicy`) swaps the
+    selector: the policy picks a *dataflow* for the layer's shape features
+    and the choice maps through the strategy↔dataflow analogy
+    (IP→einsum, OP→scatter, Gust→sort).  Default: the MoE-specific
+    cost model (:func:`select_moe_strategy`).
+    """
     strat = strategy or cfg.moe.strategy
     if strat == "auto":
-        strat = select_moe_strategy(tokens, cfg.d_model, cfg.d_ff,
-                                    cfg.moe.num_experts, cfg.moe.top_k)
+        if policy is not None:
+            from ..core.selector import LayerShape
+
+            shape = LayerShape(m=tokens, k=cfg.d_model, n=cfg.d_ff,
+                               density_a=1.0,
+                               density_b=cfg.moe.top_k / cfg.moe.num_experts)
+            chosen = policy.select_for_shape(shape)
+            strat = STRATEGY_OF_DATAFLOW[chosen[:-2]]
+        else:
+            strat = select_moe_strategy(tokens, cfg.d_model, cfg.d_ff,
+                                        cfg.moe.num_experts, cfg.moe.top_k)
     return MoEPlan(strategy=strat, tokens=tokens)
 
 

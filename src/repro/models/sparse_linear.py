@@ -54,10 +54,12 @@ class CompressedFFN:
 
     def __init__(self, w_gate: np.ndarray, w_up: np.ndarray,
                  w_down: np.ndarray, *, tokens: int, block: int = 128,
-                 spec: TPUSpec = TPUSpec()):
+                 spec: TPUSpec = TPUSpec(), backend=None, policy=None):
         self._dense = (w_gate, w_up, w_down)    # masked dense, phase-1 only
         self.block = block
         self.spec = spec
+        self.backend = backend                  # registry name / instance
+        self.policy = policy                    # SelectionPolicy / name
         self.tokens = tokens
         self._by_tokens: Dict[int, PlannedFFN] = {}
         # packed weights are keyed by ("gate"|"up"|"down", planned B format):
@@ -88,9 +90,11 @@ class CompressedFFN:
         d, f = wg.shape
         bs = (self.block, self.block, self.block)
         plan_in = flexagon_plan((tokens, d), wg, block_shape=bs,
-                                spec=self.spec)
+                                spec=self.spec, backend=self.backend,
+                                policy=self.policy)
         plan_out = flexagon_plan((tokens, f), wd, block_shape=bs,
-                                 spec=self.spec)
+                                 spec=self.spec, backend=self.backend,
+                                 policy=self.policy)
         entry = PlannedFFN(plan_in, plan_out,
                            self._pack("gate", wg, plan_in),
                            self._pack("up", wu, plan_in),
@@ -126,8 +130,13 @@ class CompressedFFN:
 
 
 def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
-                 block: int = 128, spec: TPUSpec = TPUSpec()) -> CompressedFFN:
-    """Phase 1 for one pruned FFN layer: occupancy → dataflow → plans."""
+                 block: int = 128, spec: TPUSpec = TPUSpec(),
+                 backend=None, policy=None) -> CompressedFFN:
+    """Phase 1 for one pruned FFN layer: occupancy → dataflow → plans.
+
+    ``backend``/``policy`` parameterize the plan API's execution substrate
+    and selection strategy (see :mod:`repro.backends`).
+    """
     assert "block_mask" in ffn_params, "FFN is not block-pruned"
     wg = np.asarray(_masked_weight(ffn_params["w_gate"]["w"],
                                    ffn_params["block_mask"]))
@@ -135,7 +144,8 @@ def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
                                    ffn_params["block_mask"]))
     wd = np.asarray(_masked_weight(ffn_params["w_down"]["w"],
                                    ffn_params["block_mask"].T))
-    return CompressedFFN(wg, wu, wd, tokens=tokens, block=block, spec=spec)
+    return CompressedFFN(wg, wu, wd, tokens=tokens, block=block, spec=spec,
+                         backend=backend, policy=policy)
 
 
 def sparse_ffn_apply(comp: CompressedFFN, x: jax.Array) -> jax.Array:

@@ -23,6 +23,13 @@ contract of :mod:`repro.api`):
   each new prefill length at admission, so a model routing its FFN through
   ``sparse_ffn_apply`` only ever hits cached plans
   (``stats["plan_builds"]`` / ``stats["plan_hits"]``).
+
+All phase-1 machinery runs through the pluggable plan surface
+(:mod:`repro.backends`): the sparse FFN's plans execute on whatever backend
+the ``CompressedFFN`` was built with (reported in ``stats["backend"]``), and
+``moe_policy=`` swaps the MoE dispatch selector for a dataflow
+:class:`repro.backends.SelectionPolicy` — the engine itself never touches a
+kernel.
 """
 from __future__ import annotations
 
@@ -58,7 +65,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
-                 dtype=jnp.bfloat16, sparse_ffn=None):
+                 dtype=jnp.bfloat16, sparse_ffn=None, moe_policy=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -82,7 +89,7 @@ class ServeEngine:
         cfg = getattr(model, "cfg", None)
         if cfg is not None and getattr(cfg, "moe", None) is not None \
                 and cfg.moe.strategy == "auto":
-            self.moe_plan = plan_moe(cfg, slots)
+            self.moe_plan = plan_moe(cfg, slots, policy=moe_policy)
             pinned = dataclasses.replace(
                 cfg, moe=dataclasses.replace(cfg.moe,
                                              strategy=self.moe_plan.strategy))
@@ -94,6 +101,10 @@ class ServeEngine:
         if self.sparse_ffn is not None:
             self.stats["plan_builds"] = self.sparse_ffn.plan_builds
             self.stats["plan_hits"] = self.sparse_ffn.plan_hits
+            backend = self.sparse_ffn.backend
+            self.stats["backend"] = (backend if isinstance(backend, str)
+                                     else getattr(backend, "name", None)) \
+                or "reference"
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
