@@ -21,9 +21,17 @@ class Row:
     name: str
     us_per_call: float
     derived: str
+    extra: dict | None = None       # structured fields for --json consumers
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+    def json(self) -> dict:
+        payload = {"name": self.name, "us_per_call": self.us_per_call,
+                   "derived": self.derived}
+        if self.extra:
+            payload.update(self.extra)
+        return payload
 
 
 def timed(fn: Callable, *args, **kwargs):

@@ -16,6 +16,12 @@ execution substrate:
 (asserted).  Everything routes through the backend registry — no kernel
 module is imported here.
 
+Each (dataflow, backend) row also records the *memory behaviour* of the
+operation under the paper's Table 5 on-chip budget (``repro.memory``):
+estimated on-chip bytes (L1 + L2), off-chip bytes, and how many tiles the
+dataflow's scheduler needs — so BENCH_kernels.json tracks traffic, not just
+latency.
+
 CLI (the CI smoke step)::
 
     python -m benchmarks.kernels_bench --quick --json BENCH_kernels.json
@@ -28,9 +34,11 @@ import time
 
 import numpy as np
 
-from repro import flexagon_plan, get_policy
+from repro import PAPER_BUDGET, flexagon_plan, get_policy
 from repro.core import random_sparse_dense
+from repro.core.formats import block_occupancy
 from repro.core.dataflows import DATAFLOWS
+from repro.memory import tiled_traffic
 from .common import Row
 
 BACKENDS = ("reference", "pallas")
@@ -61,6 +69,14 @@ def run(quick: bool = False) -> list[Row]:
         a = random_sparse_dense(rng, (m, k), density=da, block_shape=BS[:2])
         b = random_sparse_dense(rng, (k, n), density=db, block_shape=BS[1:])
         ref = a @ b
+        occ_a = block_occupancy(a, BS[:2])
+        occ_b = block_occupancy(b, BS[1:])
+        # memory behaviour per dataflow under the Table 5 on-chip budget
+        # (backend-independent: the schedule depends on pattern + budget)
+        memory = {
+            df: tiled_traffic(df, occ_a, occ_b, BS, PAPER_BUDGET)
+            for df in dataflows
+        }
         for backend in BACKENDS:
             # per-dataflow correctness + latency through the registry
             for df in dataflows:
@@ -68,8 +84,16 @@ def run(quick: bool = False) -> list[Row]:
                                      backend=backend)
                 us = _time(lambda p=plan: p.apply(a, b), reps=reps)
                 err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
-                rows.append(Row(f"kernels/{name}/{backend}/{df}", us,
-                                f"max_err={err:.1e}"))
+                t = memory[df]
+                rows.append(Row(
+                    f"kernels/{name}/{backend}/{df}", us,
+                    f"max_err={err:.1e} onchip={t.onchip_bytes:.0f}B "
+                    f"tiles={t.tiles}",
+                    extra={"onchip_bytes": t.onchip_bytes,
+                           "l1_bytes": t.l1_bytes,
+                           "l2_bytes": t.l2_bytes,
+                           "dram_bytes": t.dram_bytes,
+                           "tiles": t.tiles}))
 
             # phase split: plan once (build) vs execute many (apply) vs the
             # seed-equivalent per-call path that pays both every time
@@ -119,8 +143,7 @@ def main() -> None:
         payload = {
             "bench": "kernels",
             "quick": args.quick,
-            "rows": [{"name": r.name, "us_per_call": r.us_per_call,
-                      "derived": r.derived} for r in rows],
+            "rows": [r.json() for r in rows],
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -6,7 +6,10 @@
 2. Plan once with the phase-1 mapper/compiler (`flexagon_plan`), execute many
    — including under `jax.jit` — swap selection policies (heuristic vs the
    cycle-level simulator), and chain layers with `FlexagonPipeline`.
-3. Reproduce the paper's headline on one Table 6 layer with the cycle-level
+3. Give the plan a `memory_budget` (the paper's 3-tier memory hierarchy):
+   an over-budget pattern auto-tiles into a `TiledPlan`, and the simulator
+   reports per-tier (L1/L2/DRAM) traffic for the tile stream.
+4. Reproduce the paper's headline on one Table 6 layer with the cycle-level
    simulator: Flexagon == best of {SIGMA-like, SpArch-like, GAMMA-like}.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -14,8 +17,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro import (FlexagonPipeline, SparseOperand, available_backends,
-                   flexagon_plan, get_policy)
+from repro import (FlexagonPipeline, MemoryBudget, SparseOperand, TiledPlan,
+                   available_backends, flexagon_plan, get_backend,
+                   get_policy)
 from repro.core import (DATAFLOWS, LayerShape, random_sparse_dense,
                         select_dataflow)
 from repro.core.simulator import ACCELERATORS, from_layer, simulate
@@ -81,6 +85,23 @@ def main():
     print(f"  dataflows {pipe.dataflows}, majors {pipe.majors}, "
           f"{pipe.n_conversions} explicit conversions")
     print(f"  chain max|err| = {np.abs(y - ref).max():.2e}")
+
+    print("== out-of-core: memory_budget tiles what doesn't fit on chip ==")
+    # a toy 12 KiB chip: the pattern exceeds it, so phase 1 auto-tiles into
+    # a TiledPlan (per-dataflow scheduler; OP k-slabs stream via lax.scan)
+    budget = MemoryBudget(l1_bytes=4 << 10, l2_bytes=8 << 10)
+    tiled = flexagon_plan(a, b, block_shape=(16, 16, 16),
+                          memory_budget=budget)
+    assert isinstance(tiled, TiledPlan)
+    out_t = np.asarray(jax.jit(tiled.apply)(a, b))
+    print(f"  {tiled.dataflow!r} in {tiled.n_tiles} tiles "
+          f"(merge regions: {tiled.merge_plan.n_regions}), "
+          f"max|err| = {np.abs(out_t - oracle).max():.2e}")
+    rep = get_backend("simulator").report(tiled.with_backend("simulator"))
+    t = rep.traffic
+    print(f"  tier traffic: L1 {t.l1_bytes / 1e3:.0f} kB, "
+          f"L2 {t.l2_bytes / 1e3:.0f} kB, DRAM {t.dram_bytes / 1e3:.0f} kB "
+          f"(merge {t.merge_bytes / 1e3:.1f} kB) over {t.tiles} tiles")
 
     print("== cycle-level simulator (paper layer V0) ==")
     st = from_layer(PAPER_LAYERS["V0"])

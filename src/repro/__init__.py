@@ -5,14 +5,20 @@ Public operator surface (see DESIGN.md for the phase-1/phase-2 contract):
 - :func:`flexagon_plan` / :class:`FlexagonPlan` — plan once, execute many;
 - :class:`SparseOperand` / :class:`SparseFormat` — unified format surface;
 - :class:`FlexagonPipeline` — Table 4-legal per-layer plan chains;
-- :class:`PlanCache` — fingerprint-keyed plan reuse for serving loops;
+- :class:`PlanCache` — LRU-bounded fingerprint-keyed plan reuse for
+  serving loops;
 - ``repro.backends`` — pluggable execution backends
   (``reference``/``pallas``/``simulator``) and selection policies
   (``heuristic``/``simulator``/``autotune``/fixed) behind
-  ``flexagon_plan(..., backend=..., policy=...)``.
+  ``flexagon_plan(..., backend=..., policy=...)``;
+- ``repro.memory`` — the 3-tier memory hierarchy: ``flexagon_plan(...,
+  memory_budget=MemoryBudget(...))`` tiles out-of-core operations into a
+  :class:`TiledPlan` (per-dataflow tile schedulers, lax.scan k-slab
+  streaming, L1/L2/DRAM traffic pricing).
 
 Subpackages: ``core`` (formats/dataflows/selector/simulator), ``backends``,
-``kernels`` (Pallas), ``models``, ``serve``, ``train``, ``launch``.
+``memory``, ``kernels`` (Pallas), ``models``, ``serve``, ``train``,
+``launch``.
 """
 from .api import (  # noqa: F401
     FlexagonPipeline,
@@ -28,6 +34,11 @@ from .backends import (  # noqa: F401
     get_policy,
     register_backend,
 )
+from .memory import (  # noqa: F401
+    MemoryBudget,
+    PAPER_BUDGET,
+    TiledPlan,
+)
 
 __all__ = [
     "FlexagonPipeline",
@@ -40,4 +51,7 @@ __all__ = [
     "get_backend",
     "get_policy",
     "register_backend",
+    "MemoryBudget",
+    "PAPER_BUDGET",
+    "TiledPlan",
 ]

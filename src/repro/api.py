@@ -30,6 +30,12 @@ or any :class:`repro.backends.SelectionPolicy`).  Plans store only the
 backend *name* and resolve the substrate through the registry at execution
 time, so they remain plain pytrees.
 
+``memory_budget=`` adds the paper's third pillar (DESIGN.md §12): when the
+pattern's working set exceeds the on-chip
+:class:`repro.memory.MemoryBudget`, phase 1 tiles the operation with the
+dataflow's scheduler and returns a :class:`repro.memory.TiledPlan` — same
+``apply`` surface, per-tile plans streamed jit-compatibly.
+
 ``PHASE1_COUNTERS`` counts selector / layout / index-plan constructions so
 tests (and profiles) can assert that execution never re-plans.
 """
@@ -37,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -484,7 +491,8 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                   backend: BackendArg = None,
                   policy: PolicyArg = None,
                   use_pallas: Optional[bool] = None,
-                  interpret: Optional[bool] = None) -> FlexagonPlan:
+                  interpret: Optional[bool] = None,
+                  memory_budget: Optional[Any] = None) -> FlexagonPlan:
     """Phase 1, exactly once: inspect patterns, select, lay out, configure.
 
     ``a_spec``/``b_spec`` describe *patterns*: dense arrays (pattern from
@@ -499,6 +507,12 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     ``dataflow=`` pins the choice and bypasses the policy.  ``use_pallas``
     is the seed API's boolean backend switch, honoured when ``backend`` is
     not given; ``interpret=None`` defers to ``REPRO_INTERPRET``.
+
+    ``memory_budget`` (a :class:`repro.memory.MemoryBudget`) bounds the
+    on-chip working set: a pattern that exceeds it is partitioned by the
+    chosen dataflow's tile scheduler and a :class:`repro.memory.TiledPlan`
+    is returned instead (same ``apply`` contract).  Policies see the budget
+    in their :class:`SelectionContext` and rank dataflows by tiled traffic.
     """
     bm, bk, bn = block_shape
     (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
@@ -526,8 +540,20 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
         raise ValueError(f"unknown dataflow {dataflow!r}")
     ctx = SelectionContext(shape=shape, block_shape=tuple(block_shape),
                            occ_a=occ_a, occ_b=occ_b, fingerprint=fingerprint,
-                           backend=backend_obj, spec=spec, allowed=allowed)
+                           backend=backend_obj, spec=spec, allowed=allowed,
+                           memory_budget=memory_budget)
     dataflow = policy_obj.select(ctx)
+
+    if memory_budget is not None:
+        from .memory.tiled_plan import plan_tiled   # lazy: memory uses api
+
+        tiled = plan_tiled(dataflow=dataflow, occ_a=occ_a, occ_b=occ_b,
+                           shapes=(m, k, n), block_shape=tuple(block_shape),
+                           budget=memory_budget, backend=backend_obj,
+                           interpret=interpret, fingerprint=fingerprint,
+                           spec=spec)
+        if tiled is not None:
+            return tiled
 
     fmt_a, fmt_b = _TABLE3_FORMATS[dataflow]
     a_layout = CompressionLayout.from_bitmap(occ_a, (m, k), (bm, bk), fmt_a)
@@ -558,42 +584,72 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
 
 
 class PlanCache:
-    """Memoizes :func:`flexagon_plan` by pattern fingerprint.
+    """Memoizes :func:`flexagon_plan` by pattern fingerprint, LRU-bounded.
 
     Serving loops see the same sparsity patterns over and over (weights are
     fixed; activation patterns are shape-only); the cache turns repeat
-    phase-1 requests into dictionary hits.
+    phase-1 requests into dictionary hits.  ``maxsize=None`` (default)
+    keeps every plan; a bound evicts the least-recently-used plan so
+    long-running serving traffic cannot grow the cache without limit.
+    ``hits`` / ``misses`` / ``evictions`` counters (and the ``stats`` view)
+    surface cache behaviour to telemetry (e.g. ``ServeEngine.stats``).
     """
 
-    def __init__(self, spec: TPUSpec = TPUSpec()):
+    def __init__(self, spec: TPUSpec = TPUSpec(),
+                 maxsize: Optional[int] = None):
+        if maxsize is not None and maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1 or None, got {maxsize}")
         self.spec = spec
-        self._plans: Dict[Tuple, FlexagonPlan] = {}
+        self.maxsize = maxsize
+        self._plans: "OrderedDict[Tuple, Any]" = OrderedDict()
         self.hits = 0
         self.builds = 0
+        self.evictions = 0
+
+    @property
+    def misses(self) -> int:
+        """Cache misses == plans built."""
+        return self.builds
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._plans),
+                "maxsize": self.maxsize}
+
+    def __len__(self) -> int:
+        return len(self._plans)
 
     def get(self, a_spec: OperandSpec, b_spec: OperandSpec, *,
             dataflow: str = "auto",
             block_shape: Tuple[int, int, int] = (128, 128, 128),
             backend: BackendArg = None, policy: PolicyArg = None,
             use_pallas: Optional[bool] = None,
-            interpret: Optional[bool] = None) -> FlexagonPlan:
+            interpret: Optional[bool] = None,
+            memory_budget: Optional[Any] = None) -> FlexagonPlan:
         bm, bk, bn = block_shape
         (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
         (_, n), occ_b = _pattern_of(b_spec, (bk, bn))
         backend_obj = _resolve_backend(backend, use_pallas)
         policy_obj = get_policy(policy, dataflow)
         key = (_fingerprint(occ_a, occ_b, (m, k, n), tuple(block_shape)),
-               dataflow, backend_obj.name, policy_obj.cache_key, interpret)
+               dataflow, backend_obj.name, policy_obj.cache_key, interpret,
+               memory_budget)
         plan = self._plans.get(key)
         if plan is None:
             plan = flexagon_plan(a_spec, b_spec, dataflow=dataflow,
                                  block_shape=block_shape, spec=self.spec,
                                  backend=backend_obj, policy=policy_obj,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 memory_budget=memory_budget)
             self._plans[key] = plan
             self.builds += 1
+            if self.maxsize is not None and len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+                self.evictions += 1
         else:
             self.hits += 1
+            self._plans.move_to_end(key)
         return plan
 
 
@@ -630,14 +686,19 @@ class FlexagonPipeline:
                      backend: BackendArg = None,
                      policy: PolicyArg = None,
                      use_pallas: Optional[bool] = None,
-                     interpret: Optional[bool] = None) -> "FlexagonPipeline":
+                     interpret: Optional[bool] = None,
+                     memory_budget: Optional[Any] = None
+                     ) -> "FlexagonPipeline":
         """Plan a chain ``x → x@W1 → (x@W1)@W2 → …`` (phase 1 once).
 
         ``weights`` are dense arrays or :class:`SparseOperand`; layer i's K
         dim must equal layer i-1's N dim.  ``policy`` prices the per-layer
         candidates inside the ``plan_network`` DP (Table 4 conversion
         penalties stay); ``backend`` is the substrate every layer plan
-        targets.
+        targets.  ``memory_budget`` threads the on-chip capacity through
+        the whole chain: the DP prices each (layer, dataflow) cell at its
+        *tiled* cost and any over-budget layer plans into a
+        :class:`repro.memory.TiledPlan`.
         """
         bm, bk, bn = block_shape
         backend_obj = _resolve_backend(backend, use_pallas)
@@ -655,14 +716,16 @@ class FlexagonPipeline:
             PHASE1_COUNTERS["selector"] += 1
             dataflows = plan_network(
                 shapes, spec,
-                layer_cost=lambda l, d: policy_obj.layer_cost(l, d, spec))
+                layer_cost=lambda l, d: policy_obj.layer_cost(
+                    l, d, spec, memory_budget=memory_budget))
         dataflows = list(dataflows)
 
         plans, packed = [], []
         for i, (w, s, d) in enumerate(zip(weights, shapes, dataflows)):
             plan = flexagon_plan((tokens, s.k), w, dataflow=d,
                                  block_shape=block_shape, spec=spec,
-                                 backend=backend_obj, interpret=interpret)
+                                 backend=backend_obj, interpret=interpret,
+                                 memory_budget=memory_budget)
             plans.append(plan)
             packed.append(plan.pack_b(w))
         conversions = [False] + [

@@ -86,6 +86,14 @@ class ExecutionBackend(abc.ABC):
 
     name: str = "abstract"
 
+    #: Can :class:`repro.memory.TiledPlan` stream OP k-slabs through one
+    #: ``jax.lax.scan`` on this backend?  Requires ``execute`` to accept
+    #: *traced* plan leaves (index plans / layouts as scan-carried values);
+    #: backends whose phase-2 consumes concrete host-side schedules (e.g.
+    #: Pallas grid construction) leave this ``False`` and get the unrolled
+    #: tile loop instead.
+    scan_streaming: bool = False
+
     @abc.abstractmethod
     def capabilities(self) -> BackendCapability:
         """Declare what this backend can run."""

@@ -30,6 +30,10 @@ __all__ = ["PallasBackend"]
 
 class PallasBackend(ExecutionBackend):
     name = "pallas"
+    # kernel grids and merge schedules are built from *concrete* index
+    # plans at trace time; tiled plans therefore unroll tiles instead of
+    # scanning stacked (traced) sub-plans through this backend
+    scan_streaming = False
 
     def __init__(self, interpret: Optional[bool] = None):
         self.interpret = interpret

@@ -26,7 +26,7 @@ import abc
 import dataclasses
 import hashlib
 import time
-from typing import Dict, Optional, Tuple, Union
+from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
@@ -51,7 +51,10 @@ class SelectionContext:
 
     ``occ_a``/``occ_b`` are block-occupancy bitmaps (the pattern itself, for
     policies that measure); ``allowed`` is pre-negotiated against the
-    backend's capability declaration.
+    backend's capability declaration.  ``memory_budget`` (a
+    :class:`repro.memory.MemoryBudget`, or ``None`` for unbounded) makes
+    the choice traffic-aware: policies rank dataflows by what their *tiled*
+    execution moves through the L1/L2/DRAM tiers.
     """
 
     shape: LayerShape
@@ -62,6 +65,7 @@ class SelectionContext:
     backend: ExecutionBackend
     spec: TPUSpec
     allowed: Tuple[str, ...]
+    memory_budget: Optional[Any] = None
 
 
 class SelectionPolicy(abc.ABC):
@@ -80,8 +84,17 @@ class SelectionPolicy(abc.ABC):
         """Pick one dataflow from ``ctx.allowed``."""
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
-                   spec: Optional[TPUSpec] = None) -> float:
-        """Per-(layer, dataflow) cost in seconds for the network DP."""
+                   spec: Optional[TPUSpec] = None,
+                   memory_budget: Optional[Any] = None) -> float:
+        """Per-(layer, dataflow) cost in seconds for the network DP.
+
+        With a ``memory_budget`` the cost is the *tiled* execution's
+        (per-tile roofline sums + cross-tile merge traffic)."""
+        if memory_budget is not None:
+            from ..memory.traffic import tiled_estimate   # lazy: no cycle
+
+            return tiled_estimate(shape, dataflow, memory_budget,
+                                  spec or TPUSpec()).time_s
         return estimate(shape, dataflow, spec or TPUSpec()).time_s
 
     # -- conveniences ----------------------------------------------------
@@ -108,11 +121,22 @@ class SelectionPolicy(abc.ABC):
 
 
 class HeuristicPolicy(SelectionPolicy):
-    """Today's analytical roofline estimate (paper §5.2 traffic formulas)."""
+    """Today's analytical roofline estimate (paper §5.2 traffic formulas).
+
+    Under a memory budget the per-dataflow estimate becomes the tiled sum
+    (each dataflow tiles differently, so re-stream and merge traffic now
+    separate the candidates).
+    """
 
     name = "heuristic"
 
     def select(self, ctx: SelectionContext) -> str:
+        if ctx.memory_budget is not None:
+            from ..memory.traffic import tiled_estimate
+
+            return min(ctx.allowed, key=lambda d: (
+                tiled_estimate(ctx.shape, d, ctx.memory_budget, ctx.spec,
+                               occ_a=ctx.occ_a, occ_b=ctx.occ_b).time_s, d))
         return select_dataflow(ctx.shape, ctx.spec, allowed=ctx.allowed)
 
 
@@ -120,7 +144,11 @@ class SimulatorPolicy(SelectionPolicy):
     """Pick by simulated cycles — the paper's phase 1 proper.
 
     Deterministic for a fixed fingerprint: the cycle models price a
-    deterministic sampled pattern; ties break by dataflow name.
+    deterministic sampled pattern; ties break by dataflow name.  Under a
+    memory budget each candidate is priced as its *tiled* execution — the
+    per-tile cycle models plus the cross-tile merge traffic
+    (:func:`repro.memory.traffic.tiled_traffic`), so the choice consumes
+    the same per-tier numbers ``SimulatorBackend.report`` exposes.
     """
 
     name = "simulator"
@@ -131,13 +159,35 @@ class SimulatorPolicy(SelectionPolicy):
     def _oracle(self) -> ExecutionBackend:
         return get_backend(self._sim)
 
+    def _cfg(self):
+        from ..core.simulator.config import PAPER_CONFIG
+
+        return getattr(self._oracle(), "cfg", PAPER_CONFIG)
+
     def select(self, ctx: SelectionContext) -> str:
         sim = self._oracle()
+        if ctx.memory_budget is not None:
+            from ..memory.traffic import tiled_traffic
+
+            cfg = self._cfg()
+            return min(ctx.allowed, key=lambda d: (
+                tiled_traffic(d, ctx.occ_a, ctx.occ_b, ctx.block_shape,
+                              ctx.memory_budget, cfg).time_s(cfg), d))
         return min(ctx.allowed,
                    key=lambda d: (sim.cost(ctx.shape, d, ctx.spec), d))
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
-                   spec: Optional[TPUSpec] = None) -> float:
+                   spec: Optional[TPUSpec] = None,
+                   memory_budget: Optional[Any] = None) -> float:
+        if memory_budget is not None:
+            from ..memory.traffic import synthetic_occupancy, tiled_traffic
+
+            cfg = self._cfg()
+            mb, kb, nb = shape.grid
+            occ_a = synthetic_occupancy((mb, kb), shape.density_a)
+            occ_b = synthetic_occupancy((kb, nb), shape.density_b, seed=1)
+            return tiled_traffic(dataflow, occ_a, occ_b, tuple(shape.block),
+                                 memory_budget, cfg).time_s(cfg)
         return self._oracle().cost(shape, dataflow, spec)
 
 
@@ -160,7 +210,8 @@ class AutotunePolicy(SelectionPolicy):
         self.measurements = 0      # sweep count, for tests/telemetry
 
     def select(self, ctx: SelectionContext) -> str:
-        key = (ctx.fingerprint, ctx.backend.name, ctx.block_shape)
+        key = (ctx.fingerprint, ctx.backend.name, ctx.block_shape,
+               ctx.memory_budget)
         hit = self._cache.get(key)
         if hit is not None and hit in ctx.allowed:
             return hit
@@ -181,9 +232,12 @@ class AutotunePolicy(SelectionPolicy):
         b = _values_on_pattern(rng, ctx.occ_b, (k, n), (bk, bn))
         timings = {}
         for d in ctx.allowed:
+            # with a memory budget the throwaway plan tiles exactly like
+            # the real one, so the measurement *is* the tiled execution
             plan = flexagon_plan(a, b, dataflow=d,
                                  block_shape=ctx.block_shape, spec=ctx.spec,
-                                 backend=ctx.backend)
+                                 backend=ctx.backend,
+                                 memory_budget=ctx.memory_budget)
             a_c, b_c = plan.pack_a(a), plan.pack_b(b)
             np.asarray(plan.apply(a_c, b_c))        # warmup / compile
             best = np.inf
@@ -195,10 +249,12 @@ class AutotunePolicy(SelectionPolicy):
         return min(ctx.allowed, key=lambda d: (timings[d], d))
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
-                   spec: Optional[TPUSpec] = None) -> float:
+                   spec: Optional[TPUSpec] = None,
+                   memory_budget: Optional[Any] = None) -> float:
         # the network DP sees shape features only (no pattern to measure);
-        # fall back to the analytical estimate
-        return estimate(shape, dataflow, spec or TPUSpec()).time_s
+        # fall back to the analytical (tiled, if bounded) estimate
+        return SelectionPolicy.layer_cost(self, shape, dataflow, spec,
+                                          memory_budget)
 
 
 def _values_on_pattern(rng: np.random.Generator, occ: np.ndarray,
@@ -237,7 +293,8 @@ class FixedPolicy(SelectionPolicy):
         return self.dataflow
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
-                   spec: Optional[TPUSpec] = None) -> float:
+                   spec: Optional[TPUSpec] = None,
+                   memory_budget: Optional[Any] = None) -> float:
         return 0.0 if dataflow == self.dataflow else float("inf")
 
 

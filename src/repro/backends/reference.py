@@ -23,6 +23,9 @@ _EXECUTORS = {
 
 class ReferenceBackend(ExecutionBackend):
     name = "reference"
+    # the jnp executors gather/scatter through plan arrays, so tiled plans
+    # may stream OP k-slabs through lax.scan with traced plan leaves
+    scan_streaming = True
 
     def capabilities(self) -> BackendCapability:
         return BackendCapability(

@@ -41,6 +41,7 @@ _STATS_SEED = 0
 
 class SimulatorBackend(ExecutionBackend):
     name = "simulator"
+    scan_streaming = True          # executes through the reference path
 
     def __init__(self, cfg: AcceleratorConfig = PAPER_CONFIG):
         self.cfg = cfg
@@ -85,7 +86,20 @@ class SimulatorBackend(ExecutionBackend):
         return cycles / self.cfg.freq_hz
 
     def report(self, plan):
-        """Full cycle-level :class:`SimResult` for a plan's operation."""
+        """Full cycle-level result for a plan's operation.
+
+        Untiled plans get the single-operation :class:`SimResult`; a
+        :class:`repro.memory.TiledPlan` gets a
+        :class:`repro.memory.traffic.TiledSimReport` — per-tile results
+        plus the aggregated L1/L2/DRAM :class:`TierTraffic` (the same
+        numbers the ``simulator`` policy ranks dataflows by under a
+        budget).
+        """
+        from ..memory.tiled_plan import TiledPlan     # lazy: memory uses api
+        from ..memory.traffic import plan_traffic
+
+        if isinstance(plan, TiledPlan):
+            return plan_traffic(plan, self.cfg, seed=_STATS_SEED)
         m, k, n = plan.shapes
         da = plan.a_layout.nnzb / max(
             1, math.prod(plan.a_layout.skeleton().grid))

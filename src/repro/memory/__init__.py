@@ -1,0 +1,49 @@
+"""``repro.memory`` — tiled out-of-core execution (the paper's 3rd pillar).
+
+The memory-hierarchy layer between plans and backends (DESIGN.md §12):
+
+- :class:`MemoryBudget` — the on-chip capacity tiers (L1 FIFOs/PSRAM,
+  SpMSpM-customized L2) as a byte budget; :data:`PAPER_BUDGET` is Table 5;
+- :mod:`~repro.memory.tiling` — per-dataflow :class:`TileScheduler`\\ s that
+  partition one SpMSpM at pattern granularity until every tile fits
+  (IP C-tiles / OP k-slabs / Gust row bands), plus the tile-level
+  :class:`TileMergePlan`;
+- :class:`TiledPlan` — per-tile ``FlexagonPlan``\\ s composed into one
+  jit-compatible ``apply`` (OP slabs stream through ``jax.lax.scan``);
+- :mod:`~repro.memory.traffic` — L1/L2/DRAM pricing per tile
+  (:class:`TierTraffic`), consumed by the simulator backend's ``report``
+  and by traffic-aware selection policies.
+
+Entry point: ``flexagon_plan(a, b, memory_budget=MemoryBudget(...))``
+auto-tiles whenever the pattern exceeds the budget.
+"""
+from .budget import MemoryBudget, PAPER_BUDGET, operand_bytes, output_bytes
+from .tiled_plan import TiledPlan, plan_tiled
+from .tiling import (GustTileScheduler, IPTileScheduler, OPTileScheduler,
+                     Tile, TileMergePlan, TileScheduler, get_scheduler,
+                     schedule)
+from .traffic import (TierTraffic, TiledSimReport, plan_traffic,
+                      synthetic_occupancy, tiled_estimate, tiled_traffic)
+
+__all__ = [
+    "MemoryBudget",
+    "PAPER_BUDGET",
+    "operand_bytes",
+    "output_bytes",
+    "Tile",
+    "TileMergePlan",
+    "TileScheduler",
+    "IPTileScheduler",
+    "OPTileScheduler",
+    "GustTileScheduler",
+    "get_scheduler",
+    "schedule",
+    "TiledPlan",
+    "plan_tiled",
+    "TierTraffic",
+    "TiledSimReport",
+    "plan_traffic",
+    "synthetic_occupancy",
+    "tiled_estimate",
+    "tiled_traffic",
+]

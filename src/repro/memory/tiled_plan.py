@@ -1,0 +1,388 @@
+"""``TiledPlan`` — per-tile :class:`FlexagonPlan`\\ s composed into one apply.
+
+The out-of-core execution engine: when one SpMSpM's pattern exceeds the
+:class:`repro.memory.budget.MemoryBudget`, phase 1 partitions it with the
+dataflow's :mod:`tile scheduler <repro.memory.tiling>` and builds one
+ordinary ``FlexagonPlan`` per tile (same frozen-layout / frozen-index-plan
+machinery, same backend ``prepare``).  ``TiledPlan.apply`` then streams the
+tiles jit-compatibly:
+
+- disjoint-output tiles (IP C-tiles, Gust row bands) execute and land in
+  their output region via static-slice scatter-add;
+- OP k-slabs run through **one ``jax.lax.scan``** when the backend declares
+  ``scan_streaming``: slab sub-plans are padded to a uniform pytree shape at
+  plan time (appended layout slots are never referenced by the frozen work
+  lists; padded work entries scatter to an out-of-grid row and are dropped),
+  stacked leaf-wise, and the scan carry *is* the cross-slab partial-sum
+  merge — the MRN's merge phase lifted to tile granularity
+  (:class:`repro.memory.tiling.TileMergePlan` records the regions).
+
+Phase-1 counters behave exactly like the untiled plan: all layout/index-plan
+construction happens here at build time; ``apply`` is pure jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..backends import get_backend
+from ..backends.base import TABLE3_FORMATS
+from ..core import dataflows as df
+from ..core.selector import DataflowEstimate, LayerShape, TPUSpec, estimate
+from .budget import MemoryBudget
+from .tiling import Tile, TileMergePlan, schedule
+
+__all__ = ["TiledPlan", "plan_tiled"]
+
+
+def _pack_bitmap(occ: np.ndarray) -> Tuple[bytes, Tuple[int, int]]:
+    """Bitmap -> hashable (bytes, shape) so it can ride in the treedef."""
+    return np.packbits(occ.astype(bool)).tobytes(), tuple(occ.shape)
+
+
+def _unpack_bitmap(packed: Tuple[bytes, Tuple[int, int]]) -> np.ndarray:
+    buf, shape = packed
+    flat = np.unpackbits(np.frombuffer(buf, np.uint8))
+    return flat[: shape[0] * shape[1]].reshape(shape).astype(bool)
+
+
+def _pad_layout(layout, nnzb_max: int):
+    """Append never-referenced slots so slab layouts share one shape.
+
+    ``indptr`` keeps the real fiber boundaries, and the frozen work lists
+    only index real slots, so the appended (0, 0) coordinates are inert —
+    they just make ``compress`` emit a uniformly-shaped data array.
+    """
+    pad = nnzb_max - layout.nnzb
+    if pad == 0:
+        return layout
+    z = np.zeros(pad, np.int32)
+    return dataclasses.replace(
+        layout,
+        rows=np.concatenate([np.asarray(layout.rows, np.int32), z]),
+        cols=np.concatenate([np.asarray(layout.cols, np.int32), z]))
+
+
+def _pad_stream(plan: df.StreamPlan, w_max: int, oob_row: int
+                ) -> df.StreamPlan:
+    """Pad a work list to ``w_max`` entries that scatter out of the grid.
+
+    Padded entries gather slot 0 (a real block) but write their psum to
+    block-row ``oob_row`` — one past the output grid — which JAX's scatter
+    semantics drop.  Numerics are untouched; shapes become uniform.
+    """
+    pad = w_max - int(plan.a_slot.shape[0])
+    if pad == 0:
+        return plan
+    z = np.zeros(pad, np.int32)
+    return df.StreamPlan(
+        np.concatenate([np.asarray(plan.a_slot, np.int32), z]),
+        np.concatenate([np.asarray(plan.b_slot, np.int32), z]),
+        np.concatenate([np.asarray(plan.ci, np.int32),
+                        np.full(pad, oob_row, np.int32)]),
+        np.concatenate([np.asarray(plan.cj, np.int32), z]),
+        plan.seg_ptr, plan.order)
+
+
+def _stack_plans(plans):
+    """Stack uniform slab plans leaf-wise (phase-1 work, done once)."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *plans)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TiledPlan:
+    """Phase-1 output for one SpMSpM that does not fit on chip.
+
+    Mirrors the :class:`repro.api.FlexagonPlan` surface (``apply`` /
+    ``__call__`` / ``dataflow`` / ``out_major`` / ``matches`` /
+    ``with_backend`` / ``pack_a`` / ``pack_b``) so callers can hold either.
+    ``plans`` are ordinary per-tile ``FlexagonPlan``\\ s; ``tiles`` and
+    ``merge_plan`` are the static schedule; the operand bitmaps ride packed
+    in the treedef so traffic reports survive pytree round trips.
+    """
+
+    dataflow: str
+    tiles: Tuple[Tile, ...]
+    merge_plan: TileMergePlan
+    plans: Tuple[Any, ...]                   # per-tile FlexagonPlans (children)
+    shapes: Tuple[int, int, int]
+    block_shape: Tuple[int, int, int]
+    backend: str
+    budget: MemoryBudget
+    fingerprint: str
+    interpret: Optional[bool]
+    scan_ok: bool                            # OP slabs uniform & non-empty
+    occ_a_packed: Tuple[bytes, Tuple[int, int]]
+    occ_b_packed: Tuple[bytes, Tuple[int, int]]
+    #: slab plans stacked leaf-wise for the scan path, built once at plan
+    #: time (phase 1) so every eager ``apply`` skips the restack
+    scan_stacked: Any = None
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        aux = (self.dataflow, self.tiles, self.merge_plan, self.shapes,
+               self.block_shape, self.backend, self.budget, self.fingerprint,
+               self.interpret, self.scan_ok, self.occ_a_packed,
+               self.occ_b_packed)
+        return (tuple(self.plans), self.scan_stacked), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        plans, scan_stacked = children
+        (dataflow, tiles, merge_plan, shapes, block_shape, backend, budget,
+         fingerprint, interpret, scan_ok, occ_a, occ_b) = aux
+        return cls(dataflow, tiles, merge_plan, tuple(plans), shapes,
+                   block_shape, backend, budget, fingerprint, interpret,
+                   scan_ok, occ_a, occ_b, scan_stacked)
+
+    # -- phase-1 byproducts ----------------------------------------------
+    @property
+    def n_tiles(self) -> int:
+        return len(self.tiles)
+
+    @property
+    def out_major(self) -> str:
+        return df.OUTPUT_MAJOR[self.dataflow]
+
+    @property
+    def formats(self):
+        return TABLE3_FORMATS[self.dataflow]
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend == "pallas"
+
+    @property
+    def occ_a(self) -> np.ndarray:
+        return _unpack_bitmap(self.occ_a_packed)
+
+    @property
+    def occ_b(self) -> np.ndarray:
+        return _unpack_bitmap(self.occ_b_packed)
+
+    @property
+    def estimate(self) -> DataflowEstimate:
+        """Aggregate over tiles (re-reads across tiles count once per tile)."""
+        ests = [p.estimate for p in self.plans]
+        return DataflowEstimate(
+            dataflow=self.dataflow,
+            flops=sum(e.flops for e in ests),
+            bytes_a=sum(e.bytes_a for e in ests),
+            bytes_b=sum(e.bytes_b for e in ests),
+            bytes_c=sum(e.bytes_c for e in ests),
+            bytes_psum=sum(e.bytes_psum for e in ests),
+            compute_s=sum(e.compute_s for e in ests),
+            memory_s=sum(e.memory_s for e in ests),
+        )
+
+    def matches(self, a, b) -> bool:
+        """Do these operands carry the planned (whole-operation) pattern?"""
+        from ..api import _fingerprint, _pattern_of
+
+        (m, k), occ_a = _pattern_of(a, self.block_shape[:2])
+        (_, n), occ_b = _pattern_of(b, self.block_shape[1:])
+        return _fingerprint(occ_a, occ_b, (m, k, n),
+                            self.block_shape) == self.fingerprint
+
+    def with_backend(self, backend) -> "TiledPlan":
+        """Re-target onto another backend.
+
+        Backends that stream slabs through ``lax.scan`` carry padded slab
+        plans; re-targeting to a non-scanning backend (or vice versa)
+        re-tiles from the stored bitmaps so each substrate gets the plan
+        shape it expects.
+        """
+        be = get_backend(backend)
+        if self.scan_ok != (self.dataflow[:-2] == "op" and be.scan_streaming):
+            return plan_tiled(
+                dataflow=self.dataflow, occ_a=self.occ_a, occ_b=self.occ_b,
+                shapes=self.shapes, block_shape=self.block_shape,
+                budget=self.budget, backend=be, interpret=self.interpret,
+                fingerprint=self.fingerprint)
+        plans = tuple(p.with_backend(be) for p in self.plans)
+        return dataclasses.replace(
+            self, backend=be.name, plans=plans,
+            scan_stacked=_stack_plans(plans) if self.scan_ok else None)
+
+    # -- packing (host-side conveniences, phase-1 style) ------------------
+    def _pack(self, x, fmt, block_shape):
+        from ..api import SparseOperand
+
+        if isinstance(x, SparseOperand):
+            x = np.asarray(x.todense())
+        return SparseOperand.from_dense(np.asarray(x), format=fmt,
+                                        block_shape=block_shape)
+
+    def pack_a(self, a):
+        """Whole-operand compression in the planned A format.
+
+        Tiles ingest dense slices, so packing is a storage convenience here
+        (``apply`` densifies packed operands before slicing)."""
+        return self._pack(a, self.formats[0], self.block_shape[:2])
+
+    def pack_b(self, b):
+        return self._pack(b, self.formats[1], self.block_shape[1:])
+
+    # -- phase 2 ---------------------------------------------------------
+    def _densify(self, x) -> jax.Array:
+        from ..api import SparseOperand
+
+        if isinstance(x, SparseOperand):
+            return x.todense()
+        if hasattr(x, "todense") and not isinstance(x, (np.ndarray,
+                                                        jax.Array)):
+            return x.todense()
+        return jnp.asarray(x)
+
+    def apply(self, a, b, out_dtype=jnp.float32) -> jax.Array:
+        """Execute C = A @ B tile by tile.  jit-compatible, zero host work."""
+        m, k, n = self.shapes
+        bm, bk, bn = self.block_shape
+        mb = max(t.i1 for t in self.tiles)
+        kb = max(t.k1 for t in self.tiles)
+        nb = max(t.j1 for t in self.tiles)
+        a_d = self._densify(a).astype(jnp.float32)
+        b_d = self._densify(b).astype(jnp.float32)
+        a_d = jnp.pad(a_d, ((0, mb * bm - a_d.shape[0]),
+                            (0, kb * bk - a_d.shape[1])))
+        b_d = jnp.pad(b_d, ((0, kb * bk - b_d.shape[0]),
+                            (0, nb * bn - b_d.shape[1])))
+
+        backend = get_backend(self.backend)
+        if self.scan_ok and backend.scan_streaming:
+            out = self._apply_scan(a_d, b_d)
+        else:
+            out = jnp.zeros((mb * bm, nb * bn), jnp.float32)
+            for tile, plan in zip(self.tiles, self.plans):
+                a_s = a_d[tile.i0 * bm: tile.i1 * bm,
+                          tile.k0 * bk: tile.k1 * bk]
+                b_s = b_d[tile.k0 * bk: tile.k1 * bk,
+                          tile.j0 * bn: tile.j1 * bn]
+                t_out = plan.apply(a_s, b_s, jnp.float32)
+                out = out.at[tile.i0 * bm: tile.i1 * bm,
+                             tile.j0 * bn: tile.j1 * bn].add(t_out)
+        return out[:m, :n].astype(out_dtype)
+
+    __call__ = apply
+
+    def _apply_scan(self, a_d: jax.Array, b_d: jax.Array) -> jax.Array:
+        """OP k-slabs through one ``lax.scan``: the carry accumulates the
+        cross-slab partial sums (double-buffer-style streaming — XLA keeps
+        slab s+1's loads in flight while slab s multiplies)."""
+        bm, bk, bn = self.block_shape
+        s = len(self.plans)
+        ke = self.tiles[0].k1 - self.tiles[0].k0
+        stacked = self.scan_stacked
+        if stacked is None:            # e.g. plan rebuilt by hand
+            stacked = _stack_plans(self.plans)
+        a_slabs = a_d.reshape(a_d.shape[0], s, ke * bk).transpose(1, 0, 2)
+        b_slabs = b_d.reshape(s, ke * bk, b_d.shape[1])
+
+        def body(carry, xs):
+            plan, a_i, b_i = xs
+            return carry + plan.apply(a_i, b_i, jnp.float32), None
+
+        init = jnp.zeros((a_d.shape[0], b_d.shape[1]), jnp.float32)
+        out, _ = jax.lax.scan(body, init, (stacked, a_slabs, b_slabs))
+        return out
+
+
+def plan_tiled(*, dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
+               shapes: Tuple[int, int, int],
+               block_shape: Tuple[int, int, int],
+               budget: MemoryBudget, backend, interpret: Optional[bool],
+               fingerprint: str, spec: TPUSpec = TPUSpec()
+               ) -> Optional[TiledPlan]:
+    """Phase 1 for the out-of-core case.
+
+    Returns ``None`` when the scheduler covers the operation with a single
+    budget-fitting tile (the caller then builds an ordinary untiled plan).
+    """
+    from ..api import CompressionLayout, _build_index_plan
+
+    tiles, merge_plan = schedule(dataflow, occ_a, occ_b, block_shape, budget)
+    if len(tiles) <= 1:
+        return None
+
+    m, k, n = shapes
+    bm, bk, bn = block_shape
+    fmt_a, fmt_b = TABLE3_FORMATS[dataflow]
+    base = dataflow[:-2]
+    scan_capable = base == "op" and backend.scan_streaming
+
+    # pad the bitmap grids out to the tile extents (OP's uniform slabs may
+    # run past the logical K grid; the padding is empty fibers)
+    mb = max(t.i1 for t in tiles)
+    kb = max(t.k1 for t in tiles)
+    nb = max(t.j1 for t in tiles)
+    occ_a_p = np.zeros((mb, kb), dtype=bool)
+    occ_a_p[: occ_a.shape[0], : occ_a.shape[1]] = occ_a
+    occ_b_p = np.zeros((kb, nb), dtype=bool)
+    occ_b_p[: occ_b.shape[0], : occ_b.shape[1]] = occ_b
+
+    shared_est = None
+    if scan_capable:
+        # slab plans must share one treedef to stack into the scan; give
+        # them one fingerprint and one (slab-shaped) estimate
+        ke = tiles[0].k1 - tiles[0].k0
+        shared_est = estimate(
+            LayerShape(m=mb * bm, k=ke * bk, n=nb * bn,
+                       density_a=float(occ_a.mean()) if occ_a.size else 0.0,
+                       density_b=float(occ_b.mean()) if occ_b.size else 0.0,
+                       block=tuple(block_shape)), dataflow, spec)
+
+    from ..api import FlexagonPlan   # late: api defines the plan class
+
+    plans: List[FlexagonPlan] = []
+    for idx, tile in enumerate(tiles):
+        occ_at = tile.a_slice(occ_a_p)
+        occ_bt = tile.b_slice(occ_b_p)
+        shape_a = ((tile.i1 - tile.i0) * bm, (tile.k1 - tile.k0) * bk)
+        shape_b = ((tile.k1 - tile.k0) * bk, (tile.j1 - tile.j0) * bn)
+        a_layout = CompressionLayout.from_bitmap(occ_at, shape_a, (bm, bk),
+                                                 fmt_a)
+        b_layout = CompressionLayout.from_bitmap(occ_bt, shape_b, (bk, bn),
+                                                 fmt_b)
+        index_plan = _build_index_plan(dataflow, a_layout, b_layout)
+        est = shared_est if shared_est is not None else estimate(
+            LayerShape(m=shape_a[0], k=shape_a[1], n=shape_b[1],
+                       density_a=float(occ_at.mean()) if occ_at.size else 0.0,
+                       density_b=float(occ_bt.mean()) if occ_bt.size else 0.0,
+                       block=tuple(block_shape)), dataflow, spec)
+        fp = f"{fingerprint}/opslab" if scan_capable \
+            else f"{fingerprint}/t{idx}"
+        plans.append(FlexagonPlan(
+            dataflow=dataflow, a_layout=a_layout, b_layout=b_layout,
+            index_plan=index_plan, aux=None, estimate=est, fingerprint=fp,
+            shapes=(shape_a[0], shape_a[1], shape_b[1]),
+            block_shape=tuple(block_shape), backend=backend.name,
+            interpret=interpret))
+
+    scan_ok = False
+    if scan_capable:
+        nnz_a = max(p.a_layout.nnzb for p in plans)
+        nnz_b = max(p.b_layout.nnzb for p in plans)
+        w_max = max(int(p.index_plan.a_slot.shape[0]) for p in plans)
+        oob_row = nb if dataflow.endswith("_n") else mb   # transposed grid
+        for p in plans:
+            p.a_layout = _pad_layout(p.a_layout, nnz_a)
+            p.b_layout = _pad_layout(p.b_layout, nnz_b)
+            p.index_plan = _pad_stream(p.index_plan, w_max, oob_row)
+        scan_ok = w_max > 0
+
+    for p in plans:
+        p.aux = backend.prepare(p)
+
+    return TiledPlan(
+        dataflow=dataflow, tiles=tuple(tiles), merge_plan=merge_plan,
+        plans=tuple(plans), shapes=tuple(shapes),
+        block_shape=tuple(block_shape), backend=backend.name, budget=budget,
+        fingerprint=fingerprint, interpret=interpret, scan_ok=scan_ok,
+        occ_a_packed=_pack_bitmap(occ_a), occ_b_packed=_pack_bitmap(occ_b),
+        scan_stacked=_stack_plans(plans) if scan_ok else None)

@@ -1,0 +1,248 @@
+"""3-tier traffic pricing for tiled execution.
+
+Prices what a tiled SpMSpM moves through each tier of the paper's memory
+hierarchy, reusing the cycle models of
+:mod:`repro.core.simulator.accelerators` per tile:
+
+- **L1** — STA FIFO reads of the stationary operand + PSRAM psum round
+  trips (``sta_read_bytes`` + ``psram_rw_bytes`` of each tile's
+  :class:`SimResult`);
+- **L2** — STR-cache accesses of the streamed operand (``str_read_bytes``);
+- **DRAM** — each tile's off-chip bytes (``offchip_bytes``) *plus* the
+  cross-tile merge traffic: every output region written by more than one
+  tile (OP k-slabs) spills its partial C off chip between contributions and
+  reads it back to merge — by construction a tiled operation's partials
+  cannot stay resident (that is why it was tiled).
+
+Two entry points share the aggregation:
+
+- :func:`tiled_traffic` prices a (dataflow, pattern, budget) triple — what
+  selection policies consult to become traffic-aware;
+- :func:`plan_traffic` prices an existing
+  :class:`repro.memory.tiled_plan.TiledPlan` — what the simulator backend's
+  ``report`` returns (with the per-tile :class:`SimResult`\\ s attached).
+
+:func:`tiled_estimate` is the analytic (roofline) counterpart used where
+only shape features exist (the ``plan_network`` DP): per-tile
+:func:`repro.core.selector.estimate` sums, plus merge traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.selector import DataflowEstimate, LayerShape, TPUSpec, estimate
+from ..core.simulator import LayerSpec, from_layer, simulate
+from ..core.simulator.config import PAPER_CONFIG, AcceleratorConfig
+from .budget import MemoryBudget, output_bytes
+from .tiling import TileMergePlan, schedule
+
+__all__ = [
+    "TierTraffic",
+    "TiledSimReport",
+    "tiled_traffic",
+    "plan_traffic",
+    "tiled_estimate",
+    "synthetic_occupancy",
+]
+
+_SIM_OF_BASE = {"ip": "sigma_like", "op": "sparch_like", "gust": "gamma_like"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TierTraffic:
+    """Bytes moved through each tier for one (possibly tiled) operation."""
+
+    l1_bytes: float            # STA FIFO + PSRAM
+    l2_bytes: float            # STR cache
+    dram_bytes: float          # off-chip, incl. cross-tile merge round trips
+    merge_bytes: float         # the cross-tile share of dram_bytes
+    cycles: float
+    tiles: int
+
+    @property
+    def onchip_bytes(self) -> float:
+        return self.l1_bytes + self.l2_bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return self.onchip_bytes + self.dram_bytes
+
+    def time_s(self, cfg: AcceleratorConfig = PAPER_CONFIG) -> float:
+        return self.cycles / cfg.freq_hz
+
+
+@dataclasses.dataclass
+class TiledSimReport:
+    """``SimulatorBackend.report`` result for a tiled plan."""
+
+    dataflow: str
+    per_tile: List                      # SimResult per tile
+    traffic: TierTraffic
+
+    @property
+    def cycles(self) -> float:
+        return self.traffic.cycles
+
+    @property
+    def n_tiles(self) -> int:
+        return self.traffic.tiles
+
+
+def _tile_result(dataflow: str, dims: Tuple[int, int, int],
+                 da: float, db: float, cfg: AcceleratorConfig, seed: int):
+    """Cycle-model result for one tile (N variants priced as the M dual)."""
+    m, k, n = dims
+    if dataflow.endswith("_n"):
+        m, n, da, db = n, m, db, da
+    spec = LayerSpec(name="tile", m=m, n=n, k=k,
+                     sp_a=100.0 * (1.0 - da), sp_b=100.0 * (1.0 - db))
+    st = from_layer(spec, seed=seed)
+    return simulate(_SIM_OF_BASE[dataflow[:-2]], st, cfg)
+
+
+def _merge_dram_bytes(merge_plan: TileMergePlan, region_c_bytes: List[int]
+                      ) -> float:
+    """Cross-tile merge traffic: each contribution beyond the first spills
+    the region's partial C off chip and reads it back (write + read)."""
+    contribs = merge_plan.contributions()
+    return float(sum(2.0 * c_bytes * max(0, int(c) - 1)
+                     for c_bytes, c in zip(region_c_bytes, contribs)))
+
+
+def _aggregate(dataflow: str, results: List, merge_bytes: float,
+               cfg: AcceleratorConfig) -> TierTraffic:
+    l1 = sum(r.sta_read_bytes + r.psram_rw_bytes for r in results)
+    l2 = sum(r.str_read_bytes for r in results)
+    dram = sum(r.offchip_bytes for r in results) + merge_bytes
+    cycles = sum(r.cycles for r in results) \
+        + merge_bytes / cfg.dram_bytes_per_cycle
+    return TierTraffic(l1_bytes=float(l1), l2_bytes=float(l2),
+                       dram_bytes=float(dram), merge_bytes=float(merge_bytes),
+                       cycles=float(cycles), tiles=len(results))
+
+
+def _region_c_bytes(merge_plan: TileMergePlan, occ_a: np.ndarray,
+                    occ_b: np.ndarray, block_shape: Tuple[int, int, int],
+                    dtype_bytes: int) -> List[int]:
+    bm, bk, bn = block_shape
+    out = []
+    for i0, i1, j0, j1 in merge_plan.regions:
+        out.append(output_bytes(occ_a[i0:i1], occ_b[:, j0:j1], (bm, bn),
+                                dtype_bytes))
+    return out
+
+
+def _occ_density(occ: np.ndarray) -> float:
+    return float(occ.mean()) if occ.size else 0.0
+
+
+def tiled_traffic(dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
+                  block_shape: Tuple[int, int, int], budget: MemoryBudget,
+                  cfg: AcceleratorConfig = PAPER_CONFIG, seed: int = 0
+                  ) -> TierTraffic:
+    """Schedule ``dataflow`` under ``budget`` and price the tile stream.
+
+    Tile dimensions come from the bitmaps and block shape alone.
+    Deterministic for fixed inputs (tile patterns are seeded samples at the
+    tile's density, exactly like ``SimulatorBackend.cost``).
+    """
+    bm, bk, bn = block_shape
+    tiles, merge_plan = schedule(dataflow, occ_a, occ_b, block_shape, budget)
+    results = []
+    for tile in tiles:
+        occ_at = tile.a_slice(occ_a)
+        occ_bt = tile.b_slice(occ_b)
+        dims = ((tile.i1 - tile.i0) * bm, occ_at.shape[1] * bk,
+                (tile.j1 - tile.j0) * bn)
+        results.append(_tile_result(dataflow, dims, _occ_density(occ_at),
+                                    _occ_density(occ_bt), cfg, seed))
+    merge = _merge_dram_bytes(
+        merge_plan, _region_c_bytes(merge_plan, occ_a, occ_b, block_shape,
+                                    budget.dtype_bytes))
+    return _aggregate(dataflow, results, merge, cfg)
+
+
+def plan_traffic(plan, cfg: AcceleratorConfig = PAPER_CONFIG,
+                 seed: int = 0) -> TiledSimReport:
+    """Per-tile cycle models + tier aggregation for a built ``TiledPlan``."""
+    occ_a, occ_b = plan.occ_a, plan.occ_b
+    bm, bk, bn = plan.block_shape
+    results = []
+    for tile, sub in zip(plan.tiles, plan.plans):
+        occ_at = occ_a[tile.i0: tile.i1, tile.k0: min(tile.k1,
+                                                      occ_a.shape[1])]
+        occ_bt = occ_b[tile.k0: min(tile.k1, occ_b.shape[0]),
+                       tile.j0: tile.j1]
+        results.append(_tile_result(plan.dataflow, sub.shapes,
+                                    _occ_density(occ_at),
+                                    _occ_density(occ_bt), cfg, seed))
+    merge = _merge_dram_bytes(
+        plan.merge_plan,
+        _region_c_bytes(plan.merge_plan, occ_a, occ_b, plan.block_shape,
+                        plan.budget.dtype_bytes))
+    return TiledSimReport(dataflow=plan.dataflow, per_tile=results,
+                          traffic=_aggregate(plan.dataflow, results, merge,
+                                             cfg))
+
+
+def synthetic_occupancy(grid: Tuple[int, int], density: float,
+                        seed: int = 0) -> np.ndarray:
+    """Deterministic sampled bitmap for shape-only callers (network DP)."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, grid[0], grid[1],
+                                int(max(0.0, density) * 1e6)]))
+    return rng.random(grid) < density
+
+
+def tiled_estimate(shape: LayerShape, dataflow: str, budget: MemoryBudget,
+                   spec: Optional[TPUSpec] = None,
+                   occ_a: Optional[np.ndarray] = None,
+                   occ_b: Optional[np.ndarray] = None) -> DataflowEstimate:
+    """Analytic (roofline) estimate of the tiled execution.
+
+    Summing per-tile estimates naturally charges cross-tile re-streaming —
+    operand stripes shared by several tiles are counted once per tile — and
+    the cross-tile merge rides in ``bytes_psum``.
+    """
+    spec = spec or TPUSpec()
+    bm, bk, bn = shape.block
+    mb, kb, nb = shape.grid
+    if occ_a is None:
+        occ_a = synthetic_occupancy((mb, kb), shape.density_a)
+    if occ_b is None:
+        occ_b = synthetic_occupancy((kb, nb), shape.density_b, seed=1)
+    tiles, merge_plan = schedule(dataflow, occ_a, occ_b, shape.block, budget)
+
+    agg = None
+    for tile in tiles:
+        occ_at = tile.a_slice(occ_a)
+        occ_bt = tile.b_slice(occ_b)
+        sub = LayerShape(m=(tile.i1 - tile.i0) * bm,
+                         k=max(1, occ_at.shape[1]) * bk,
+                         n=(tile.j1 - tile.j0) * bn,
+                         density_a=_occ_density(occ_at),
+                         density_b=_occ_density(occ_bt),
+                         block=shape.block)
+        e = estimate(sub, dataflow, spec)
+        if agg is None:
+            agg = dataclasses.replace(e)
+        else:
+            agg = DataflowEstimate(
+                dataflow=dataflow, flops=agg.flops + e.flops,
+                bytes_a=agg.bytes_a + e.bytes_a,
+                bytes_b=agg.bytes_b + e.bytes_b,
+                bytes_c=agg.bytes_c + e.bytes_c,
+                bytes_psum=agg.bytes_psum + e.bytes_psum,
+                compute_s=agg.compute_s + e.compute_s,
+                memory_s=agg.memory_s + e.memory_s)
+    merge = _merge_dram_bytes(
+        merge_plan, _region_c_bytes(merge_plan, occ_a, occ_b, shape.block,
+                                    budget.dtype_bytes))
+    return DataflowEstimate(
+        dataflow=dataflow, flops=agg.flops, bytes_a=agg.bytes_a,
+        bytes_b=agg.bytes_b, bytes_c=agg.bytes_c,
+        bytes_psum=agg.bytes_psum + merge, compute_s=agg.compute_s,
+        memory_s=agg.memory_s + merge / spec.hbm_bw)

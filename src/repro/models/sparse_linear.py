@@ -19,13 +19,14 @@ dense), the SpMM special case of SpMSpM — `flexagon_plan` takes the bare
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..api import FlexagonPlan, SparseOperand, flexagon_plan
+from ..api import FlexagonPlan, PlanCache, SparseOperand, flexagon_plan
 from ..core.selector import TPUSpec
 from .ffn import _masked_weight
 
@@ -50,18 +51,33 @@ class CompressedFFN:
     a token shape runs phase 1 (counted in ``plan_builds``); every subsequent
     request is a dictionary hit (``plan_hits``) — the plan-once / execute-many
     contract for serving loops.
+
+    The underlying :class:`repro.api.FlexagonPlan`\\ s route through a
+    (shareable, LRU-bounded) :class:`repro.api.PlanCache`; ``max_shapes``
+    bounds the per-token-shape entries the FFN itself retains, so serving
+    traffic with adversarial shape diversity cannot grow either level
+    without limit.  ``cache_stats`` exposes the plan cache's
+    hit/miss/eviction counters (surfaced by ``ServeEngine.stats``).
     """
 
     def __init__(self, w_gate: np.ndarray, w_up: np.ndarray,
                  w_down: np.ndarray, *, tokens: int, block: int = 128,
-                 spec: TPUSpec = TPUSpec(), backend=None, policy=None):
+                 spec: TPUSpec = TPUSpec(), backend=None, policy=None,
+                 memory_budget=None, plan_cache: Optional[PlanCache] = None,
+                 max_shapes: Optional[int] = None):
         self._dense = (w_gate, w_up, w_down)    # masked dense, phase-1 only
         self.block = block
         self.spec = spec
         self.backend = backend                  # registry name / instance
         self.policy = policy                    # SelectionPolicy / name
+        self.memory_budget = memory_budget      # repro.memory.MemoryBudget
         self.tokens = tokens
-        self._by_tokens: Dict[int, PlannedFFN] = {}
+        self.plan_cache = plan_cache if plan_cache is not None \
+            else PlanCache(spec, maxsize=None if max_shapes is None
+                           else 2 * max_shapes)
+        self.max_shapes = max_shapes
+        self._by_tokens: "OrderedDict[int, PlannedFFN]" = OrderedDict()
+        self.shape_evictions = 0
         # packed weights are keyed by ("gate"|"up"|"down", planned B format):
         # the weight-side layout depends only on the weight pattern and the
         # format Table 3 assigns, so token shapes sharing a dataflow family
@@ -71,8 +87,15 @@ class CompressedFFN:
         self.plan_hits = 0
         self.specialize(tokens)
 
-    def _pack(self, which: str, w: np.ndarray, plan: FlexagonPlan
-              ) -> SparseOperand:
+    @property
+    def cache_stats(self) -> Dict[str, Any]:
+        """Plan-cache counters + this FFN's shape-level cache state."""
+        stats = dict(self.plan_cache.stats)
+        stats["shapes"] = len(self._by_tokens)
+        stats["shape_evictions"] = self.shape_evictions
+        return stats
+
+    def _pack(self, which: str, w: np.ndarray, plan) -> SparseOperand:
         key = (which, plan.formats[1])
         packed = self._packed.get(key)
         if packed is None:
@@ -85,28 +108,38 @@ class CompressedFFN:
         entry = self._by_tokens.get(tokens)
         if entry is not None:
             self.plan_hits += 1
+            self._by_tokens.move_to_end(tokens)
             return entry
         wg, wu, wd = self._dense
         d, f = wg.shape
         bs = (self.block, self.block, self.block)
-        plan_in = flexagon_plan((tokens, d), wg, block_shape=bs,
-                                spec=self.spec, backend=self.backend,
-                                policy=self.policy)
-        plan_out = flexagon_plan((tokens, f), wd, block_shape=bs,
-                                 spec=self.spec, backend=self.backend,
-                                 policy=self.policy)
+        plan_in = self.plan_cache.get((tokens, d), wg, block_shape=bs,
+                                      backend=self.backend,
+                                      policy=self.policy,
+                                      memory_budget=self.memory_budget)
+        plan_out = self.plan_cache.get((tokens, f), wd, block_shape=bs,
+                                       backend=self.backend,
+                                       policy=self.policy,
+                                       memory_budget=self.memory_budget)
         entry = PlannedFFN(plan_in, plan_out,
                            self._pack("gate", wg, plan_in),
                            self._pack("up", wu, plan_in),
                            self._pack("down", wd, plan_out))
         self._by_tokens[tokens] = entry
         self.plan_builds += 1
+        if self.max_shapes is not None \
+                and len(self._by_tokens) > self.max_shapes:
+            self._by_tokens.popitem(last=False)
+            self.shape_evictions += 1
         return entry
 
     # -- conveniences over the default (construction-time) token shape ----
     @property
     def _default(self) -> PlannedFFN:
-        return self._by_tokens[self.tokens]
+        entry = self._by_tokens.get(self.tokens)
+        if entry is None:               # evicted under max_shapes: replan
+            entry = self.specialize(self.tokens)
+        return entry
 
     @property
     def w_gate(self) -> SparseOperand:
@@ -131,11 +164,15 @@ class CompressedFFN:
 
 def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
                  block: int = 128, spec: TPUSpec = TPUSpec(),
-                 backend=None, policy=None) -> CompressedFFN:
+                 backend=None, policy=None, memory_budget=None,
+                 plan_cache: Optional[PlanCache] = None,
+                 max_shapes: Optional[int] = None) -> CompressedFFN:
     """Phase 1 for one pruned FFN layer: occupancy → dataflow → plans.
 
     ``backend``/``policy`` parameterize the plan API's execution substrate
-    and selection strategy (see :mod:`repro.backends`).
+    and selection strategy (see :mod:`repro.backends`); ``memory_budget``
+    auto-tiles over-budget matmuls (see :mod:`repro.memory`);
+    ``plan_cache``/``max_shapes`` bound the serving-loop plan caches.
     """
     assert "block_mask" in ffn_params, "FFN is not block-pruned"
     wg = np.asarray(_masked_weight(ffn_params["w_gate"]["w"],
@@ -145,7 +182,9 @@ def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
     wd = np.asarray(_masked_weight(ffn_params["w_down"]["w"],
                                    ffn_params["block_mask"].T))
     return CompressedFFN(wg, wu, wd, tokens=tokens, block=block, spec=spec,
-                         backend=backend, policy=policy)
+                         backend=backend, policy=policy,
+                         memory_budget=memory_budget, plan_cache=plan_cache,
+                         max_shapes=max_shapes)
 
 
 def sparse_ffn_apply(comp: CompressedFFN, x: jax.Array) -> jax.Array:

@@ -22,7 +22,9 @@ contract of :mod:`repro.api`):
   (``slots`` tokens, exposed as ``decode_ffn``) at construction and for
   each new prefill length at admission, so a model routing its FFN through
   ``sparse_ffn_apply`` only ever hits cached plans
-  (``stats["plan_builds"]`` / ``stats["plan_hits"]``).
+  (``stats["plan_builds"]`` / ``stats["plan_hits"]``; the underlying
+  LRU :class:`repro.api.PlanCache`'s hit/miss/eviction counters surface
+  as ``stats["plan_cache"]``).
 
 All phase-1 machinery runs through the pluggable plan surface
 (:mod:`repro.backends`): the sparse FFN's plans execute on whatever backend
@@ -105,6 +107,11 @@ class ServeEngine:
             self.stats["backend"] = (backend if isinstance(backend, str)
                                      else getattr(backend, "name", None)) \
                 or "reference"
+            # LRU plan-cache behaviour under serving traffic
+            # (hit/miss/eviction counters, DESIGN.md §12)
+            cache_stats = getattr(self.sparse_ffn, "cache_stats", None)
+            if cache_stats is not None:
+                self.stats["plan_cache"] = cache_stats
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
