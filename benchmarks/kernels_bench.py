@@ -20,7 +20,11 @@ Each (dataflow, backend) row also records the *memory behaviour* of the
 operation under the paper's Table 5 on-chip budget (``repro.memory``):
 estimated on-chip bytes (L1 + L2), off-chip bytes, and how many tiles the
 dataflow's scheduler needs — so BENCH_kernels.json tracks traffic, not just
-latency.
+latency.  Rows additionally carry the *distributed* trajectory
+(``repro.dist``): the virtual mesh shape, shard count, and interconnect
+(ICI) bytes of the dataflow's partition strategy over ``DIST_SHARDS``
+shards — nonzero for OP k-slabs, whose partial sums all-reduce across the
+mesh.
 
 CLI (the CI smoke step)::
 
@@ -38,11 +42,14 @@ from repro import PAPER_BUDGET, flexagon_plan, get_policy
 from repro.core import random_sparse_dense
 from repro.core.formats import block_occupancy
 from repro.core.dataflows import DATAFLOWS
-from repro.memory import tiled_traffic
+from repro.memory import sharded_traffic, tiled_traffic
 from .common import Row
 
 BACKENDS = ("reference", "pallas")
 BS = (16, 16, 16)
+#: shard count for the analytic multi-device pricing (pattern-level, so no
+#: actual devices are needed — the row tracks the trajectory, not wall-clock)
+DIST_SHARDS = 4
 CASES = [
     ("sq_like", 64, 64, 128, 0.3, 0.9),
     ("op_like", 64, 256, 64, 0.1, 0.5),
@@ -77,6 +84,13 @@ def run(quick: bool = False) -> list[Row]:
             df: tiled_traffic(df, occ_a, occ_b, BS, PAPER_BUDGET)
             for df in dataflows
         }
+        # multi-device trajectory: the dataflow's partition strategy over a
+        # virtual DIST_SHARDS-shard mesh, interconnect tier included
+        dist = {
+            df: sharded_traffic(df, occ_a, occ_b, BS, DIST_SHARDS,
+                                budget=PAPER_BUDGET)
+            for df in dataflows
+        }
         for backend in BACKENDS:
             # per-dataflow correctness + latency through the registry
             for df in dataflows:
@@ -85,15 +99,19 @@ def run(quick: bool = False) -> list[Row]:
                 us = _time(lambda p=plan: p.apply(a, b), reps=reps)
                 err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
                 t = memory[df]
+                d = dist[df]
                 rows.append(Row(
                     f"kernels/{name}/{backend}/{df}", us,
                     f"max_err={err:.1e} onchip={t.onchip_bytes:.0f}B "
-                    f"tiles={t.tiles}",
+                    f"tiles={t.tiles} ici={d.ici_bytes:.0f}B",
                     extra={"onchip_bytes": t.onchip_bytes,
                            "l1_bytes": t.l1_bytes,
                            "l2_bytes": t.l2_bytes,
                            "dram_bytes": t.dram_bytes,
-                           "tiles": t.tiles}))
+                           "tiles": t.tiles,
+                           "mesh_shape": [DIST_SHARDS],
+                           "shards": DIST_SHARDS,
+                           "ici_bytes": d.ici_bytes}))
 
             # phase split: plan once (build) vs execute many (apply) vs the
             # seed-equivalent per-call path that pays both every time

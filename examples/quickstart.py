@@ -9,17 +9,25 @@
 3. Give the plan a `memory_budget` (the paper's 3-tier memory hierarchy):
    an over-budget pattern auto-tiles into a `TiledPlan`, and the simulator
    reports per-tier (L1/L2/DRAM) traffic for the tile stream.
-4. Reproduce the paper's headline on one Table 6 layer with the cycle-level
+4. Give the plan a `mesh`: phase 1 partitions it across the devices into a
+   `ShardedPlan` (one `shard_map` apply; OP k-slabs merge partial sums with
+   a psum collective, priced as an interconnect traffic tier).
+5. Reproduce the paper's headline on one Table 6 layer with the cycle-level
    simulator: Flexagon == best of {SIGMA-like, SpArch-like, GAMMA-like}.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+from repro.config import virtual_devices
+
+virtual_devices(8)      # 8 virtual CPU devices, before jax's backend init
+
 import jax
 import numpy as np
 
-from repro import (FlexagonPipeline, MemoryBudget, SparseOperand, TiledPlan,
-                   available_backends, flexagon_plan, get_backend,
-                   get_policy)
+from repro import (FlexagonPipeline, MemoryBudget, ShardedPlan,
+                   SparseOperand, TiledPlan, available_backends,
+                   flexagon_plan, get_backend, get_policy)
+from repro.launch.mesh import make_virtual_mesh
 from repro.core import (DATAFLOWS, LayerShape, random_sparse_dense,
                         select_dataflow)
 from repro.core.simulator import ACCELERATORS, from_layer, simulate
@@ -102,6 +110,23 @@ def main():
     print(f"  tier traffic: L1 {t.l1_bytes / 1e3:.0f} kB, "
           f"L2 {t.l2_bytes / 1e3:.0f} kB, DRAM {t.dram_bytes / 1e3:.0f} kB "
           f"(merge {t.merge_bytes / 1e3:.1f} kB) over {t.tiles} tiles")
+
+    print("== distributed: mesh= partitions the plan across devices ==")
+    # the dataflow's Partitioner shards the block grid (IP: output panels,
+    # OP: k-slabs + psum merge, Gust: row bands); apply is one shard_map
+    mesh = make_virtual_mesh(min(8, len(jax.devices())))
+    sharded = flexagon_plan(a, b, dataflow="op_m", block_shape=(16, 16, 16),
+                            mesh=mesh)
+    assert isinstance(sharded, ShardedPlan)
+    out_s = np.asarray(jax.jit(sharded.apply)(a, b))
+    print(f"  {sharded.dataflow!r} over {sharded.n_shards} shards "
+          f"(axis {sharded.axis!r}, collective {sharded.collective!r}), "
+          f"max|err| = {np.abs(out_s - oracle).max():.2e}")
+    rep = get_backend("simulator").report(sharded.with_backend("simulator"))
+    print(f"  interconnect tier: {rep.traffic.ici_bytes / 1e3:.1f} kB "
+          f"psum-merge traffic across {rep.shards} shards "
+          f"(L1 {rep.traffic.l1_bytes / 1e3:.0f} kB, "
+          f"DRAM {rep.traffic.dram_bytes / 1e3:.0f} kB)")
 
     print("== cycle-level simulator (paper layer V0) ==")
     st = from_layer(PAPER_LAYERS["V0"])

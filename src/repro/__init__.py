@@ -14,11 +14,15 @@ Public operator surface (see DESIGN.md for the phase-1/phase-2 contract):
 - ``repro.memory`` — the 3-tier memory hierarchy: ``flexagon_plan(...,
   memory_budget=MemoryBudget(...))`` tiles out-of-core operations into a
   :class:`TiledPlan` (per-dataflow tile schedulers, lax.scan k-slab
-  streaming, L1/L2/DRAM traffic pricing).
+  streaming, L1/L2/DRAM traffic pricing);
+- ``repro.dist`` — distributed plan execution: ``flexagon_plan(...,
+  mesh=...)`` partitions the plan across a jax device mesh into a
+  :class:`ShardedPlan` (per-dataflow shard strategies, one ``shard_map``
+  apply, psum cross-shard merge, interconnect traffic tier).
 
 Subpackages: ``core`` (formats/dataflows/selector/simulator), ``backends``,
-``memory``, ``kernels`` (Pallas), ``models``, ``serve``, ``train``,
-``launch``.
+``memory``, ``dist``, ``kernels`` (Pallas), ``models``, ``serve``,
+``train``, ``launch``.
 """
 from .api import (  # noqa: F401
     FlexagonPipeline,
@@ -39,6 +43,11 @@ from .memory import (  # noqa: F401
     PAPER_BUDGET,
     TiledPlan,
 )
+from .dist import (  # noqa: F401
+    DistPartition,
+    Partitioner,
+    ShardedPlan,
+)
 
 __all__ = [
     "FlexagonPipeline",
@@ -54,4 +63,7 @@ __all__ = [
     "MemoryBudget",
     "PAPER_BUDGET",
     "TiledPlan",
+    "DistPartition",
+    "Partitioner",
+    "ShardedPlan",
 ]

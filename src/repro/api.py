@@ -36,6 +36,12 @@ pattern's working set exceeds the on-chip
 dataflow's scheduler and returns a :class:`repro.memory.TiledPlan` — same
 ``apply`` surface, per-tile plans streamed jit-compatibly.
 
+``mesh=`` / ``partition=`` add placement (DESIGN.md §13): phase 1
+partitions the block grid across a jax device mesh with the dataflow's
+:class:`repro.dist.Partitioner` and returns a
+:class:`repro.dist.ShardedPlan` — same ``apply`` surface, one
+``shard_map``, cross-shard partial sums merged by ``psum``.
+
 ``PHASE1_COUNTERS`` counts selector / layout / index-plan constructions so
 tests (and profiles) can assert that execution never re-plans.
 """
@@ -492,7 +498,9 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                   policy: PolicyArg = None,
                   use_pallas: Optional[bool] = None,
                   interpret: Optional[bool] = None,
-                  memory_budget: Optional[Any] = None) -> FlexagonPlan:
+                  memory_budget: Optional[Any] = None,
+                  mesh: Optional[Any] = None,
+                  partition: Optional[Any] = None) -> FlexagonPlan:
     """Phase 1, exactly once: inspect patterns, select, lay out, configure.
 
     ``a_spec``/``b_spec`` describe *patterns*: dense arrays (pattern from
@@ -513,6 +521,15 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     chosen dataflow's tile scheduler and a :class:`repro.memory.TiledPlan`
     is returned instead (same ``apply`` contract).  Policies see the budget
     in their :class:`SelectionContext` and rank dataflows by tiled traffic.
+
+    ``mesh`` (a jax device mesh) makes placement part of phase 1: the
+    dataflow's :class:`repro.dist.Partitioner` splits the block grid into
+    one sub-problem per shard and a :class:`repro.dist.ShardedPlan` is
+    returned — same ``apply`` contract, one ``shard_map`` across the mesh,
+    with OP k-slab partitions merging partial sums via ``psum``.
+    ``partition`` (a :class:`repro.dist.DistPartition`) overrides the
+    strategy's axis or shard count; tiling under ``memory_budget`` then
+    happens *within* each shard.
     """
     bm, bk, bn = block_shape
     (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
@@ -541,8 +558,21 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     ctx = SelectionContext(shape=shape, block_shape=tuple(block_shape),
                            occ_a=occ_a, occ_b=occ_b, fingerprint=fingerprint,
                            backend=backend_obj, spec=spec, allowed=allowed,
-                           memory_budget=memory_budget)
+                           memory_budget=memory_budget, mesh=mesh,
+                           partition=partition)
     dataflow = policy_obj.select(ctx)
+
+    if mesh is not None or partition is not None:
+        from .dist.sharded_plan import plan_sharded   # lazy: dist uses api
+
+        sharded = plan_sharded(dataflow=dataflow, occ_a=occ_a, occ_b=occ_b,
+                               shapes=(m, k, n),
+                               block_shape=tuple(block_shape), mesh=mesh,
+                               partition=partition, budget=memory_budget,
+                               backend=backend_obj, interpret=interpret,
+                               fingerprint=fingerprint, spec=spec)
+        if sharded is not None:
+            return sharded
 
     if memory_budget is not None:
         from .memory.tiled_plan import plan_tiled   # lazy: memory uses api
@@ -626,22 +656,30 @@ class PlanCache:
             backend: BackendArg = None, policy: PolicyArg = None,
             use_pallas: Optional[bool] = None,
             interpret: Optional[bool] = None,
-            memory_budget: Optional[Any] = None) -> FlexagonPlan:
+            memory_budget: Optional[Any] = None,
+            mesh: Optional[Any] = None,
+            partition: Optional[Any] = None) -> FlexagonPlan:
+        from .dist.partition import mesh_key   # lazy: dist uses api
+
         bm, bk, bn = block_shape
         (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
         (_, n), occ_b = _pattern_of(b_spec, (bk, bn))
         backend_obj = _resolve_backend(backend, use_pallas)
         policy_obj = get_policy(policy, dataflow)
+        # the mesh *shape* (device grid + axis names) and partition spec are
+        # part of the plan's identity: a plan sharded for one mesh must
+        # never be served for another
         key = (_fingerprint(occ_a, occ_b, (m, k, n), tuple(block_shape)),
                dataflow, backend_obj.name, policy_obj.cache_key, interpret,
-               memory_budget)
+               memory_budget, mesh_key(mesh), partition)
         plan = self._plans.get(key)
         if plan is None:
             plan = flexagon_plan(a_spec, b_spec, dataflow=dataflow,
                                  block_shape=block_shape, spec=self.spec,
                                  backend=backend_obj, policy=policy_obj,
                                  interpret=interpret,
-                                 memory_budget=memory_budget)
+                                 memory_budget=memory_budget,
+                                 mesh=mesh, partition=partition)
             self._plans[key] = plan
             self.builds += 1
             if self.maxsize is not None and len(self._plans) > self.maxsize:
@@ -687,7 +725,9 @@ class FlexagonPipeline:
                      policy: PolicyArg = None,
                      use_pallas: Optional[bool] = None,
                      interpret: Optional[bool] = None,
-                     memory_budget: Optional[Any] = None
+                     memory_budget: Optional[Any] = None,
+                     mesh: Optional[Any] = None,
+                     partition: Optional[Any] = None
                      ) -> "FlexagonPipeline":
         """Plan a chain ``x → x@W1 → (x@W1)@W2 → …`` (phase 1 once).
 
@@ -698,7 +738,10 @@ class FlexagonPipeline:
         targets.  ``memory_budget`` threads the on-chip capacity through
         the whole chain: the DP prices each (layer, dataflow) cell at its
         *tiled* cost and any over-budget layer plans into a
-        :class:`repro.memory.TiledPlan`.
+        :class:`repro.memory.TiledPlan`.  ``mesh``/``partition`` place
+        every layer plan on the device mesh (each becomes a
+        :class:`repro.dist.ShardedPlan`); the DP's transition legality is
+        unchanged — partials merge inside each layer's apply.
         """
         bm, bk, bn = block_shape
         backend_obj = _resolve_backend(backend, use_pallas)
@@ -725,7 +768,8 @@ class FlexagonPipeline:
             plan = flexagon_plan((tokens, s.k), w, dataflow=d,
                                  block_shape=block_shape, spec=spec,
                                  backend=backend_obj, interpret=interpret,
-                                 memory_budget=memory_budget)
+                                 memory_budget=memory_budget,
+                                 mesh=mesh, partition=partition)
             plans.append(plan)
             packed.append(plan.pack_b(w))
         conversions = [False] + [

@@ -94,6 +94,14 @@ class ExecutionBackend(abc.ABC):
     #: tile loop instead.
     scan_streaming: bool = False
 
+    #: Can :class:`repro.dist.ShardedPlan` run this backend's ``execute``
+    #: inside a ``shard_map`` shard and merge cross-shard partial sums with
+    #: collectives (``jax.lax.psum``)?  Requires the same traced-plan-leaf
+    #: tolerance as ``scan_streaming`` (each device slices its sub-plan out
+    #: of a sharded stack); backends that need concrete host-side schedules
+    #: leave this ``False`` and get the sequential shard loop instead.
+    collective_merge: bool = False
+
     @abc.abstractmethod
     def capabilities(self) -> BackendCapability:
         """Declare what this backend can run."""

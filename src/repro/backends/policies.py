@@ -54,7 +54,11 @@ class SelectionContext:
     backend's capability declaration.  ``memory_budget`` (a
     :class:`repro.memory.MemoryBudget`, or ``None`` for unbounded) makes
     the choice traffic-aware: policies rank dataflows by what their *tiled*
-    execution moves through the L1/L2/DRAM tiers.
+    execution moves through the L1/L2/DRAM tiers.  ``mesh`` /
+    ``partition`` (a jax mesh and a :class:`repro.dist.DistPartition`)
+    make it placement-aware: each dataflow is priced as its *sharded*
+    execution — slowest shard plus the cross-shard merge over the
+    interconnect tier — so policies rank (dataflow × partition) jointly.
     """
 
     shape: LayerShape
@@ -66,6 +70,15 @@ class SelectionContext:
     spec: TPUSpec
     allowed: Tuple[str, ...]
     memory_budget: Optional[Any] = None
+    mesh: Optional[Any] = None
+    partition: Optional[Any] = None
+
+    @property
+    def n_shards(self) -> int:
+        """Shard count the (mesh, partition) pair resolves to (1 = local)."""
+        from ..dist.partition import resolve_shards   # lazy: dist uses api
+
+        return resolve_shards(self.mesh, self.partition)
 
 
 class SelectionPolicy(abc.ABC):
@@ -131,6 +144,16 @@ class HeuristicPolicy(SelectionPolicy):
     name = "heuristic"
 
     def select(self, ctx: SelectionContext) -> str:
+        shards = ctx.n_shards
+        if shards > 1:
+            from ..memory.traffic import sharded_estimate
+
+            axis = getattr(ctx.partition, "axis", None)
+            return min(ctx.allowed, key=lambda d: (
+                sharded_estimate(ctx.shape, d, shards,
+                                 budget=ctx.memory_budget, spec=ctx.spec,
+                                 occ_a=ctx.occ_a, occ_b=ctx.occ_b,
+                                 axis=axis), d))
         if ctx.memory_budget is not None:
             from ..memory.traffic import tiled_estimate
 
@@ -166,6 +189,16 @@ class SimulatorPolicy(SelectionPolicy):
 
     def select(self, ctx: SelectionContext) -> str:
         sim = self._oracle()
+        shards = ctx.n_shards
+        if shards > 1:
+            from ..memory.traffic import sharded_traffic
+
+            cfg = self._cfg()
+            axis = getattr(ctx.partition, "axis", None)
+            return min(ctx.allowed, key=lambda d: (
+                sharded_traffic(d, ctx.occ_a, ctx.occ_b, ctx.block_shape,
+                                shards, budget=ctx.memory_budget, cfg=cfg,
+                                axis=axis).time_s(cfg), d))
         if ctx.memory_budget is not None:
             from ..memory.traffic import tiled_traffic
 
@@ -210,8 +243,10 @@ class AutotunePolicy(SelectionPolicy):
         self.measurements = 0      # sweep count, for tests/telemetry
 
     def select(self, ctx: SelectionContext) -> str:
+        from ..dist.partition import mesh_key   # lazy: dist uses api
+
         key = (ctx.fingerprint, ctx.backend.name, ctx.block_shape,
-               ctx.memory_budget)
+               ctx.memory_budget, mesh_key(ctx.mesh), ctx.partition)
         hit = self._cache.get(key)
         if hit is not None and hit in ctx.allowed:
             return hit
@@ -232,12 +267,14 @@ class AutotunePolicy(SelectionPolicy):
         b = _values_on_pattern(rng, ctx.occ_b, (k, n), (bk, bn))
         timings = {}
         for d in ctx.allowed:
-            # with a memory budget the throwaway plan tiles exactly like
-            # the real one, so the measurement *is* the tiled execution
+            # with a memory budget (or a mesh) the throwaway plan tiles and
+            # shards exactly like the real one, so the measurement *is* the
+            # tiled / sharded execution
             plan = flexagon_plan(a, b, dataflow=d,
                                  block_shape=ctx.block_shape, spec=ctx.spec,
                                  backend=ctx.backend,
-                                 memory_budget=ctx.memory_budget)
+                                 memory_budget=ctx.memory_budget,
+                                 mesh=ctx.mesh, partition=ctx.partition)
             a_c, b_c = plan.pack_a(a), plan.pack_b(b)
             np.asarray(plan.apply(a_c, b_c))        # warmup / compile
             best = np.inf

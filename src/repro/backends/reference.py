@@ -24,8 +24,10 @@ _EXECUTORS = {
 class ReferenceBackend(ExecutionBackend):
     name = "reference"
     # the jnp executors gather/scatter through plan arrays, so tiled plans
-    # may stream OP k-slabs through lax.scan with traced plan leaves
+    # may stream OP k-slabs through lax.scan with traced plan leaves, and
+    # sharded plans may run them inside shard_map with a psum merge
     scan_streaming = True
+    collective_merge = True
 
     def capabilities(self) -> BackendCapability:
         return BackendCapability(

@@ -42,6 +42,7 @@ _STATS_SEED = 0
 class SimulatorBackend(ExecutionBackend):
     name = "simulator"
     scan_streaming = True          # executes through the reference path
+    collective_merge = True
 
     def __init__(self, cfg: AcceleratorConfig = PAPER_CONFIG):
         self.cfg = cfg
@@ -93,11 +94,17 @@ class SimulatorBackend(ExecutionBackend):
         :class:`repro.memory.traffic.TiledSimReport` — per-tile results
         plus the aggregated L1/L2/DRAM :class:`TierTraffic` (the same
         numbers the ``simulator`` policy ranks dataflows by under a
-        budget).
+        budget).  A :class:`repro.dist.ShardedPlan` gets a
+        :class:`repro.memory.traffic.ShardedSimReport` whose traffic adds
+        the fourth (interconnect) tier — nonzero for k-slab partitions,
+        whose partial sums all-reduce across the mesh.
         """
+        from ..dist.sharded_plan import ShardedPlan   # lazy: dist uses api
         from ..memory.tiled_plan import TiledPlan     # lazy: memory uses api
-        from ..memory.traffic import plan_traffic
+        from ..memory.traffic import plan_traffic, sharded_plan_traffic
 
+        if isinstance(plan, ShardedPlan):
+            return sharded_plan_traffic(plan, self.cfg, seed=_STATS_SEED)
         if isinstance(plan, TiledPlan):
             return plan_traffic(plan, self.cfg, seed=_STATS_SEED)
         m, k, n = plan.shapes

@@ -8,12 +8,41 @@ executed through the ``pallas`` backend.  Unset, kernels run in interpret
 mode (CPU-safe validation, the development default); set ``REPRO_INTERPRET=0``
 on a real TPU to compile natively.  An explicit ``interpret=`` argument at any
 call site still wins.
+
+``virtual_devices`` — the one place that sets
+``--xla_force_host_platform_device_count`` (virtual CPU devices for mesh /
+``shard_map`` work without TPUs).  Launchers (``launch.dryrun`` /
+``launch.roofline``), the test session, and examples all route through it
+instead of hand-writing ``XLA_FLAGS``.
 """
 from __future__ import annotations
 
 import os
 
-__all__ = ["interpret_default", "resolve_interpret"]
+__all__ = ["interpret_default", "resolve_interpret", "virtual_devices"]
+
+_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def virtual_devices(n: int = 8, *, override: bool = False) -> str:
+    """Request ``n`` host-platform (CPU) devices via ``XLA_FLAGS``.
+
+    Must run before jax initializes its backend (jax locks the device count
+    on first device query, *not* on import — so calling this right after
+    ``import repro`` is still in time).  Preserves any other flags already
+    in ``XLA_FLAGS``; an existing device-count flag is kept unless
+    ``override=True``.  Returns the resulting ``XLA_FLAGS`` value.
+    """
+    flag = f"{_DEVICE_FLAG}={int(n)}"
+    parts = os.environ.get("XLA_FLAGS", "").split()
+    if any(p.startswith(_DEVICE_FLAG) for p in parts):
+        if override:
+            parts = [p for p in parts if not p.startswith(_DEVICE_FLAG)]
+            parts.append(flag)
+    else:
+        parts.append(flag)
+    os.environ["XLA_FLAGS"] = " ".join(parts)
+    return os.environ["XLA_FLAGS"]
 
 _TRUE = {"1", "true", "yes", "on"}
 _FALSE = {"0", "false", "no", "off"}

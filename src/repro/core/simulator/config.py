@@ -25,6 +25,9 @@ class AcceleratorConfig:
     dram_latency_ns: float = 100.0
     dram_bw_bytes_per_s: float = 256e9
     freq_hz: float = 800e6            # TSMC 28 nm @ 800 MHz (paper §4)
+    #: chip-to-chip interconnect bandwidth (the dist layer's fourth traffic
+    #: tier; 50 GB/s per link matches the launch-side roofline constants)
+    ici_bw_bytes_per_s: float = 50e9
     #: effective outstanding demand misses for irregular (Gust) gathers —
     #: bounded by the shared DRAM controller queue, not the 16 cache banks.
     #: Calibrated on the Table 6 OP-vs-Gust crossover (see EXPERIMENTS.md).
@@ -37,6 +40,10 @@ class AcceleratorConfig:
     @property
     def dram_bytes_per_cycle(self) -> float:
         return self.dram_bw_bytes_per_s / self.freq_hz
+
+    @property
+    def ici_bytes_per_cycle(self) -> float:
+        return self.ici_bw_bytes_per_s / self.freq_hz
 
     @property
     def dram_latency_cycles(self) -> float:

@@ -1,5 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from ..config import virtual_devices
+
+virtual_devices(512, override=True)
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape) for
 the production meshes, and record memory / cost / collective analyses.
@@ -9,8 +12,9 @@ Usage:
         --shape train_4k [--multipod] [--out artifacts/dryrun]
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
 
-The XLA_FLAGS line above MUST execute before any other import (jax locks the
-device count on first init); do not move it.
+The virtual_devices call above MUST execute before jax's first backend init
+(device count locks then, not at import); do not move it below the jax
+import.
 """
 import argparse      # noqa: E402
 import json          # noqa: E402

@@ -1,5 +1,8 @@
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+from ..config import virtual_devices
+
+virtual_devices(512)
 
 """Roofline analysis (deliverable g).
 

@@ -22,8 +22,10 @@ from .tiled_plan import TiledPlan, plan_tiled
 from .tiling import (GustTileScheduler, IPTileScheduler, OPTileScheduler,
                      Tile, TileMergePlan, TileScheduler, get_scheduler,
                      schedule)
-from .traffic import (TierTraffic, TiledSimReport, plan_traffic,
-                      synthetic_occupancy, tiled_estimate, tiled_traffic)
+from .traffic import (ShardedSimReport, TierTraffic, TiledSimReport,
+                      plan_traffic, sharded_estimate, sharded_plan_traffic,
+                      sharded_traffic, synthetic_occupancy, tiled_estimate,
+                      tiled_traffic)
 
 __all__ = [
     "MemoryBudget",
@@ -42,7 +44,11 @@ __all__ = [
     "plan_tiled",
     "TierTraffic",
     "TiledSimReport",
+    "ShardedSimReport",
     "plan_traffic",
+    "sharded_estimate",
+    "sharded_plan_traffic",
+    "sharded_traffic",
     "synthetic_occupancy",
     "tiled_estimate",
     "tiled_traffic",

@@ -63,7 +63,8 @@ class CompressedFFN:
     def __init__(self, w_gate: np.ndarray, w_up: np.ndarray,
                  w_down: np.ndarray, *, tokens: int, block: int = 128,
                  spec: TPUSpec = TPUSpec(), backend=None, policy=None,
-                 memory_budget=None, plan_cache: Optional[PlanCache] = None,
+                 memory_budget=None, mesh=None, partition=None,
+                 plan_cache: Optional[PlanCache] = None,
                  max_shapes: Optional[int] = None):
         self._dense = (w_gate, w_up, w_down)    # masked dense, phase-1 only
         self.block = block
@@ -71,6 +72,8 @@ class CompressedFFN:
         self.backend = backend                  # registry name / instance
         self.policy = policy                    # SelectionPolicy / name
         self.memory_budget = memory_budget      # repro.memory.MemoryBudget
+        self.mesh = mesh                        # jax device mesh (repro.dist)
+        self.partition = partition              # repro.dist.DistPartition
         self.tokens = tokens
         self.plan_cache = plan_cache if plan_cache is not None \
             else PlanCache(spec, maxsize=None if max_shapes is None
@@ -116,11 +119,15 @@ class CompressedFFN:
         plan_in = self.plan_cache.get((tokens, d), wg, block_shape=bs,
                                       backend=self.backend,
                                       policy=self.policy,
-                                      memory_budget=self.memory_budget)
+                                      memory_budget=self.memory_budget,
+                                      mesh=self.mesh,
+                                      partition=self.partition)
         plan_out = self.plan_cache.get((tokens, f), wd, block_shape=bs,
                                        backend=self.backend,
                                        policy=self.policy,
-                                       memory_budget=self.memory_budget)
+                                       memory_budget=self.memory_budget,
+                                       mesh=self.mesh,
+                                       partition=self.partition)
         entry = PlannedFFN(plan_in, plan_out,
                            self._pack("gate", wg, plan_in),
                            self._pack("up", wu, plan_in),
@@ -165,6 +172,7 @@ class CompressedFFN:
 def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
                  block: int = 128, spec: TPUSpec = TPUSpec(),
                  backend=None, policy=None, memory_budget=None,
+                 mesh=None, partition=None,
                  plan_cache: Optional[PlanCache] = None,
                  max_shapes: Optional[int] = None) -> CompressedFFN:
     """Phase 1 for one pruned FFN layer: occupancy → dataflow → plans.
@@ -172,7 +180,10 @@ def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
     ``backend``/``policy`` parameterize the plan API's execution substrate
     and selection strategy (see :mod:`repro.backends`); ``memory_budget``
     auto-tiles over-budget matmuls (see :mod:`repro.memory`);
-    ``plan_cache``/``max_shapes`` bound the serving-loop plan caches.
+    ``mesh``/``partition`` shard every plan across a device mesh (see
+    :mod:`repro.dist` — the fused-decode matmuls then run as one
+    ``shard_map``); ``plan_cache``/``max_shapes`` bound the serving-loop
+    plan caches.
     """
     assert "block_mask" in ffn_params, "FFN is not block-pruned"
     wg = np.asarray(_masked_weight(ffn_params["w_gate"]["w"],
@@ -183,7 +194,8 @@ def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
                                    ffn_params["block_mask"].T))
     return CompressedFFN(wg, wu, wd, tokens=tokens, block=block, spec=spec,
                          backend=backend, policy=policy,
-                         memory_budget=memory_budget, plan_cache=plan_cache,
+                         memory_budget=memory_budget, mesh=mesh,
+                         partition=partition, plan_cache=plan_cache,
                          max_shapes=max_shapes)
 
 

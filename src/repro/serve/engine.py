@@ -31,7 +31,11 @@ All phase-1 machinery runs through the pluggable plan surface
 the ``CompressedFFN`` was built with (reported in ``stats["backend"]``), and
 ``moe_policy=`` swaps the MoE dispatch selector for a dataflow
 :class:`repro.backends.SelectionPolicy` — the engine itself never touches a
-kernel.
+kernel.  A ``CompressedFFN`` built with a ``mesh=`` runs the fused decode
+*sharded* — each decode-shape plan is a :class:`repro.dist.ShardedPlan`
+whose ``shard_map`` the jitted decode closure traces straight through, and
+``stats["dist"]`` reports the mesh shape, shard count, and collective-merge
+(ICI) bytes.
 """
 from __future__ import annotations
 
@@ -112,6 +116,21 @@ class ServeEngine:
             cache_stats = getattr(self.sparse_ffn, "cache_stats", None)
             if cache_stats is not None:
                 self.stats["plan_cache"] = cache_stats
+            # sharded fused decode: shard / collective telemetry from the
+            # decode-shape plans (DESIGN.md §13)
+            entry = self.decode_ffn
+            if entry is not None:
+                dist = [p.dist_stats for p in (entry.plan_in, entry.plan_out)
+                        if hasattr(p, "dist_stats")]
+                if dist:
+                    self.stats["dist"] = {
+                        "mesh_shape": dist[0]["mesh_shape"],
+                        "shards": dist[0]["shards"],
+                        "collectives": sum(1 for d in dist
+                                           if d["collective"] == "psum"),
+                        "ici_bytes": float(sum(d["ici_bytes"]
+                                               for d in dist)),
+                    }
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):

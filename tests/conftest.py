@@ -1,8 +1,11 @@
 """Test-session config.
 
-Gives the session a handful of CPU devices so sharding tests exercise real
-multi-device paths — but NOT the dry-run's 512 (smoke tests and benches
-should see a small device count; the dry-run sets its own flag).
+Gives the session 8 virtual CPU devices (via the centralized
+``repro.config.virtual_devices`` helper) so sharding and distributed-plan
+tests exercise real multi-device paths — but NOT the dry-run's 512 (smoke
+tests and benches should see a small device count; the dry-run sets its own
+flag).  The ``virtual_mesh`` fixture hands tests the corresponding
+8-shard mesh.
 
 Also installs a minimal, deterministic ``hypothesis`` fallback when the real
 package is absent (the property tests import ``given``/``settings``/
@@ -14,7 +17,22 @@ import os
 import sys
 import types
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import pytest
+
+try:
+    from repro.config import virtual_devices
+    virtual_devices(8)
+except ImportError:     # running without PYTHONPATH=src; keep old behaviour
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="session")
+def virtual_mesh():
+    """An 8-virtual-device CPU mesh — distributed tests run in CI sans TPUs."""
+    from repro.launch.mesh import make_virtual_mesh
+
+    return make_virtual_mesh(8)
 
 
 def _install_hypothesis_stub():

@@ -1,0 +1,316 @@
+"""Distributed plan execution (repro.dist, DESIGN.md §13).
+
+Sharded-vs-single-device parity across all six dataflows × both block input
+formats × {1, 2, 8}-shard meshes, the shard_map/serial paths, the
+interconnect traffic tier, mesh-aware plan caching (property test), and the
+mesh construction helpers.  Runs on 8 virtual CPU devices provisioned by
+conftest via ``repro.config.virtual_devices``.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import (DistPartition, FlexagonPlan, MemoryBudget, PlanCache,
+                   ShardedPlan, SparseOperand, TiledPlan, flexagon_plan,
+                   get_backend)
+from repro.core import random_sparse_dense
+from repro.core.dataflows import DATAFLOWS
+from repro.dist import Partitioner, default_axis, mesh_key
+from repro.launch.mesh import make_local_mesh, make_virtual_mesh
+from repro.memory import sharded_traffic
+from repro.memory.tiling import Tile
+
+BS = (8, 8, 8)
+
+
+def _case(seed=0, m=32, k=48, n=40, da=0.4, db=0.5):
+    rng = np.random.default_rng(seed)
+    a = random_sparse_dense(rng, (m, k), density=da, block_shape=BS[:2])
+    b = random_sparse_dense(rng, (k, n), density=db, block_shape=BS[1:])
+    return a, b
+
+
+@pytest.fixture(scope="module")
+def ab():
+    return _case()
+
+
+# ---------------------------------------------------------------------------
+# sharded-vs-single-device parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [1, 2, 8])
+@pytest.mark.parametrize("fmt", ["bcsr", "bcsc"])
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+def test_sharded_parity(dataflow, fmt, shards, ab, virtual_mesh):
+    a, b = ab
+    mesh = make_virtual_mesh(shards)
+    a_op = SparseOperand.from_dense(a, format=fmt, block_shape=BS[:2])
+    b_op = SparseOperand.from_dense(b, format=fmt, block_shape=BS[1:])
+    plan = flexagon_plan(a_op, b_op, dataflow=dataflow, block_shape=BS,
+                         mesh=mesh)
+    single = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS)
+    ref = np.asarray(single.apply(a, b))
+    out = np.asarray(plan.apply(a_op, b_op))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+    if shards > 1:
+        assert isinstance(plan, ShardedPlan)
+        assert plan.n_shards == shards
+        assert plan.axis == default_axis(dataflow)
+        assert plan.shard_ok         # reference backend runs the shard_map
+    else:
+        assert isinstance(plan, FlexagonPlan)   # 1 shard degrades gracefully
+
+
+def test_sharded_parity_vs_tiled_single_device(ab, virtual_mesh):
+    """Acceptance: sharded apply == single-device TiledPlan result."""
+    a, b = ab
+    budget = MemoryBudget(l1_bytes=1 << 10, l2_bytes=2 << 10)
+    tiled_some = False
+    for dataflow in ("ip_m", "op_m", "gust_m"):
+        tiled = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS,
+                              memory_budget=budget)
+        tiled_some |= isinstance(tiled, TiledPlan)
+        sharded = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS,
+                                mesh=virtual_mesh, memory_budget=budget)
+        assert isinstance(sharded, ShardedPlan)
+        np.testing.assert_allclose(np.asarray(sharded.apply(a, b)),
+                                   np.asarray(tiled.apply(a, b)),
+                                   rtol=1e-5, atol=1e-5)
+    assert tiled_some    # the budget is small enough to tile at least one
+
+
+def test_jit_apply_and_pytree_roundtrip(ab, virtual_mesh):
+    a, b = ab
+    plan = flexagon_plan(a, b, dataflow="op_m", block_shape=BS,
+                         mesh=virtual_mesh)
+    out = np.asarray(jax.jit(plan.apply)(a, b))
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    plan2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_allclose(np.asarray(plan2.apply(a, b)), out,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_serial_fallback_backend(ab):
+    """A backend without collective_merge gets the unrolled shard loop."""
+    a, b = ab
+    mesh = make_virtual_mesh(2)
+    plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS, mesh=mesh,
+                         backend="pallas", interpret=True)
+    assert isinstance(plan, ShardedPlan)
+    assert not plan.shard_ok
+    np.testing.assert_allclose(np.asarray(plan.apply(a, b)), a @ b,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_partition_override_and_budget_within_shard(ab, virtual_mesh):
+    a, b = ab
+    plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS,
+                         mesh=virtual_mesh,
+                         partition=DistPartition(axis="m", shards=2))
+    assert plan.axis == "m" and plan.n_shards == 2
+    np.testing.assert_allclose(np.asarray(plan.apply(a, b)), a @ b,
+                               rtol=1e-4, atol=1e-4)
+    # a budget small enough to tile within each shard: placement stays
+    # orthogonal to tiling — some shards become TiledPlans (serial path)
+    budget = MemoryBudget(l1_bytes=1 << 10, l2_bytes=2 << 10)
+    plan_t = flexagon_plan(a, b, dataflow="gust_m", block_shape=BS,
+                           mesh=make_virtual_mesh(2), memory_budget=budget)
+    assert isinstance(plan_t, ShardedPlan)
+    assert any(isinstance(p, TiledPlan) for p in plan_t.plans)
+    np.testing.assert_allclose(np.asarray(plan_t.apply(a, b)), a @ b,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_with_backend_retarget(ab, virtual_mesh):
+    a, b = ab
+    plan = flexagon_plan(a, b, dataflow="op_m", block_shape=BS,
+                         mesh=virtual_mesh)
+    sim = plan.with_backend("simulator")
+    assert isinstance(sim, ShardedPlan) and sim.backend == "simulator"
+    np.testing.assert_allclose(np.asarray(sim.apply(a, b)),
+                               np.asarray(plan.apply(a, b)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# interconnect traffic tier
+# ---------------------------------------------------------------------------
+
+
+def test_report_has_interconnect_tier(ab, virtual_mesh):
+    a, b = ab
+    sim = get_backend("simulator")
+    op = flexagon_plan(a, b, dataflow="op_m", block_shape=BS,
+                       mesh=virtual_mesh, backend=sim)
+    rep = sim.report(op)
+    assert rep.shards == 8 and len(rep.per_shard) == 8
+    assert rep.traffic.ici_bytes > 0            # k-slab psum merge
+    assert rep.traffic.l1_bytes > 0 and rep.traffic.dram_bytes > 0
+    assert rep.traffic.total_bytes >= rep.traffic.ici_bytes
+    # disjoint-output partitions exchange nothing
+    for dataflow in ("ip_m", "gust_m"):
+        p = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS,
+                          mesh=virtual_mesh, backend=sim)
+        assert sim.report(p).traffic.ici_bytes == 0
+    assert op.dist_stats["collective"] == "psum"
+    assert op.dist_stats["ici_bytes"] == rep.traffic.ici_bytes
+
+
+def test_report_with_budget_and_padding_shards(ab, virtual_mesh):
+    """Regression: report() on a budgeted sharded plan whose shard count
+    does not divide the block grid (padding-only shards) must not crash —
+    the shard slices are re-derived zero-padded, not zero-size."""
+    a, b = ab                    # K grid = 6 blocks, 8 k-slab shards
+    sim = get_backend("simulator")
+    budget = MemoryBudget(l1_bytes=1 << 10, l2_bytes=2 << 10)
+    plan = flexagon_plan(a, b, dataflow="op_m", block_shape=BS,
+                         mesh=virtual_mesh, memory_budget=budget,
+                         backend=sim)
+    rep = sim.report(plan)
+    assert rep.shards == 8 and rep.traffic.ici_bytes > 0
+
+
+def test_sharded_traffic_scaling(ab):
+    """More k-slab shards → more interconnect merge traffic."""
+    a, b = ab
+    from repro.core.formats import block_occupancy
+
+    occ_a = block_occupancy(a, BS[:2])
+    occ_b = block_occupancy(b, BS[1:])
+    t2 = sharded_traffic("op_m", occ_a, occ_b, BS, 2)
+    t8 = sharded_traffic("op_m", occ_a, occ_b, BS, 8)
+    assert 0 < t2.ici_bytes < t8.ici_bytes
+    t_ip = sharded_traffic("ip_m", occ_a, occ_b, BS, 8)
+    assert t_ip.ici_bytes == 0
+    assert sharded_traffic("op_m", occ_a, occ_b, BS, 1).ici_bytes == 0
+
+
+def test_policies_rank_with_mesh(ab, virtual_mesh):
+    a, b = ab
+    for policy in ("heuristic", "simulator"):
+        plan = flexagon_plan(a, b, block_shape=BS, mesh=virtual_mesh,
+                             policy=policy)
+        assert isinstance(plan, ShardedPlan)
+        assert plan.dataflow in DATAFLOWS
+
+
+# ---------------------------------------------------------------------------
+# plan cache: mesh identity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10)
+@given(st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 2, 4, 8]))
+def test_plan_cache_never_crosses_meshes(s1, s2):
+    """Property: a plan built for one mesh is never served for another."""
+    a, b = _case(seed=3, m=16, k=24, n=16)
+    cache = PlanCache()
+    m1, m2 = make_virtual_mesh(s1), make_virtual_mesh(s2)
+    p1 = cache.get(a, b, dataflow="op_m", block_shape=BS, mesh=m1)
+    hits_before = cache.hits
+    p2 = cache.get(a, b, dataflow="op_m", block_shape=BS, mesh=m2)
+    shards1 = p1.n_shards if isinstance(p1, ShardedPlan) else 1
+    shards2 = p2.n_shards if isinstance(p2, ShardedPlan) else 1
+    assert shards1 == s1 and shards2 == s2
+    if mesh_key(m1) == mesh_key(m2):
+        assert cache.hits == hits_before + 1 and p2 is p1
+    else:
+        assert cache.hits == hits_before and p2 is not p1
+    # same mesh again → always a hit
+    p3 = cache.get(a, b, dataflow="op_m", block_shape=BS, mesh=m2)
+    assert p3 is p2
+
+
+# ---------------------------------------------------------------------------
+# partitioner + mesh helpers
+# ---------------------------------------------------------------------------
+
+
+def test_partitioner_strategies():
+    assert default_axis("ip_m") == "n" and default_axis("ip_n") == "m"
+    assert default_axis("op_m") == "k" and default_axis("op_n") == "k"
+    assert default_axis("gust_m") == "m" and default_axis("gust_n") == "n"
+    part = Partitioner("op_m")
+    tiles = part.shard_tiles((4, 6, 5), 4)
+    assert len(tiles) == 4
+    assert all(t.k1 - t.k0 == 2 for t in tiles)       # uniform padded slabs
+    assert tiles[-1].k1 == 8                          # padded past the grid
+    # tile-stream placement follows the strategy axis
+    stream = [Tile(0, 4, k, k + 2, 0, 5) for k in range(0, 8, 2)]
+    assert part.assign(stream, 2) == [0, 0, 1, 1]
+
+
+def test_mesh_helpers(virtual_mesh):
+    local = make_local_mesh()
+    assert local.devices.shape[1] == 1                # (n, 1), n >= 1
+    assert tuple(virtual_mesh.axis_names) == ("shards",)
+    assert np.asarray(virtual_mesh.devices).size == 8
+    one = make_virtual_mesh(1)
+    assert np.asarray(one.devices).size == 1
+    with pytest.raises(RuntimeError):
+        make_virtual_mesh(10_000)
+
+
+def test_serve_engine_reports_dist_stats(virtual_mesh):
+    """A sharded CompressedFFN attached to the engine surfaces mesh /
+    shard / collective telemetry through ``stats["dist"]``."""
+    from repro.configs import get_config
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+    from repro.models.ffn import ffn_init
+    from repro.models.sparse_linear import compress_ffn
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config("smollm-360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fcfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, d_ff=96, vocab=64, ffn_block_sparsity=0.4)
+    fparams = ffn_init(jax.random.PRNGKey(0), fcfg)
+    fparams["block_mask"] = (jax.random.uniform(
+        jax.random.PRNGKey(9), (4, 6)) > 0.4).astype(jnp.float32)
+    comp = compress_ffn(fparams, tokens=2, block=16, mesh=virtual_mesh,
+                        partition=DistPartition(shards=2))
+    eng = ServeEngine(model, params, slots=2, max_seq=64, sparse_ffn=comp)
+    assert isinstance(eng.decode_ffn.plan_in, ShardedPlan)
+    dist = eng.stats["dist"]
+    assert dist["shards"] == 2 and dist["mesh_shape"] == (8,)
+    assert dist["ici_bytes"] >= 0
+    rng = np.random.default_rng(3)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab, size=5),
+                       max_new_tokens=3))
+    eng.run_to_completion()
+    assert eng.stats["completed"] == 1
+    assert eng.stats["dist"]["shards"] == 2    # survives stat syncs
+
+
+def test_compressed_ffn_sharded_decode(virtual_mesh):
+    """CompressedFFN(mesh=...) plans sharded matmuls and caches per mesh."""
+    from repro.models.sparse_linear import CompressedFFN, sparse_ffn_apply
+
+    rng = np.random.default_rng(0)
+    d, f = 16, 32
+    mask = rng.random((d // 8, f // 8)) < 0.6
+    wg = (rng.standard_normal((d, f)) *
+          np.kron(mask, np.ones((8, 8)))).astype(np.float32)
+    wu = (rng.standard_normal((d, f)) *
+          np.kron(mask, np.ones((8, 8)))).astype(np.float32)
+    wd = (rng.standard_normal((f, d)) *
+          np.kron(mask.T, np.ones((8, 8)))).astype(np.float32)
+    comp = CompressedFFN(wg, wu, wd, tokens=8, block=8, mesh=virtual_mesh,
+                         partition=DistPartition(shards=2))
+    entry = comp.specialize(8)
+    assert isinstance(entry.plan_in, ShardedPlan)
+    assert entry.plan_in.n_shards == 2
+    x = rng.standard_normal((1, 8, d)).astype(np.float32)
+    y = np.asarray(sparse_ffn_apply(comp, jnp.asarray(x)))
+    x2 = x.reshape(8, d)
+    ref = (jax.nn.silu(x2 @ wg) * (x2 @ wu)) @ wd
+    np.testing.assert_allclose(y.reshape(8, d), ref, rtol=1e-3, atol=1e-3)
