@@ -20,7 +20,8 @@ Each (dataflow, backend) row also records the *memory behaviour* of the
 operation under the paper's Table 5 on-chip budget (``repro.memory``):
 estimated on-chip bytes (L1 + L2), off-chip bytes, and how many tiles the
 dataflow's scheduler needs — so BENCH_kernels.json tracks traffic, not just
-latency.  Rows additionally carry the *distributed* trajectory
+latency.  A ``tile_dataflows`` field carries the case's mixed-mode per-tile
+dataflow histogram (DESIGN.md §14) so heterogeneity trends are visible.  Rows additionally carry the *distributed* trajectory
 (``repro.dist``): the virtual mesh shape, shard count, and interconnect
 (ICI) bytes of the dataflow's partition strategy over ``DIST_SHARDS``
 shards — nonzero for OP k-slabs, whose partial sums all-reduce across the
@@ -35,6 +36,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from collections import Counter
 
 import numpy as np
 
@@ -42,7 +44,7 @@ from repro import PAPER_BUDGET, flexagon_plan, get_policy
 from repro.core import random_sparse_dense
 from repro.core.formats import block_occupancy
 from repro.core.dataflows import DATAFLOWS
-from repro.memory import sharded_traffic, tiled_traffic
+from repro.memory import mixed_tile_choices, sharded_traffic, tiled_traffic
 from .common import Row
 
 BACKENDS = ("reference", "pallas")
@@ -91,6 +93,10 @@ def run(quick: bool = False) -> list[Row]:
                                 budget=PAPER_BUDGET)
             for df in dataflows
         }
+        # the mixed-mode trajectory (DESIGN.md §14): per-tile dataflow
+        # histogram of the case's mixed schedule under the same budget
+        mixed_hist = dict(Counter(
+            mixed_tile_choices(occ_a, occ_b, BS, PAPER_BUDGET)))
         for backend in BACKENDS:
             # per-dataflow correctness + latency through the registry
             for df in dataflows:
@@ -111,7 +117,8 @@ def run(quick: bool = False) -> list[Row]:
                            "tiles": t.tiles,
                            "mesh_shape": [DIST_SHARDS],
                            "shards": DIST_SHARDS,
-                           "ici_bytes": d.ici_bytes}))
+                           "ici_bytes": d.ici_bytes,
+                           "tile_dataflows": mixed_hist}))
 
             # phase split: plan once (build) vs execute many (apply) vs the
             # seed-equivalent per-call path that pays both every time

@@ -111,6 +111,41 @@ def main():
           f"L2 {t.l2_bytes / 1e3:.0f} kB, DRAM {t.dram_bytes / 1e3:.0f} kB "
           f"(merge {t.merge_bytes / 1e3:.1f} kB) over {t.tiles} tiles")
 
+    print("== mixed-dataflow tiles: dataflow becomes a per-tile decision ==")
+    # heterogeneous pattern — a dense band + uniform-sparse remainder in A.
+    # dataflow="mixed" tiles the output grid (disjoint C regions) and lets
+    # the selection policy pick each tile's dataflow on the tile's own
+    # occupancy slice; the simulator prices the mix at or below every
+    # single-dataflow plan (DESIGN.md §14)
+    ah = np.zeros((96, 96), np.float32)
+    ah[:48] = rng.standard_normal((48, 96)).astype(np.float32)
+    ah[48:] = random_sparse_dense(rng, (48, 96), density=0.5,
+                                  block_shape=(8, 8))
+    bh = random_sparse_dense(rng, (96, 96), density=0.9, block_shape=(8, 8))
+    hbudget = MemoryBudget(l1_bytes=20000, l2_bytes=40000)
+    mixed = flexagon_plan(ah, bh, dataflow="mixed", block_shape=(8, 8, 8),
+                          memory_budget=hbudget, policy="simulator",
+                          backend="simulator")
+    assert isinstance(mixed, TiledPlan) and mixed.dataflow == "mixed"
+    out_m = np.asarray(jax.jit(mixed.apply)(ah, bh))
+    print(f"  per-tile choices over {mixed.n_tiles} tiles: "
+          f"{mixed.tile_histogram}, "
+          f"max|err| = {np.abs(out_m - ah @ bh).max():.2e}")
+    sim_be = get_backend("simulator")
+    mrep = sim_be.report(mixed)
+    mixed_s = mrep.traffic.time_s(sim_be.cfg)
+    singles = {}
+    for d in DATAFLOWS:
+        p = flexagon_plan(ah, bh, dataflow=d, block_shape=(8, 8, 8),
+                          memory_budget=hbudget, backend="simulator")
+        r = sim_be.report(p)
+        singles[d] = r.traffic.time_s(sim_be.cfg) if isinstance(p, TiledPlan) \
+            else r.cycles / sim_be.cfg.freq_hz
+    best_d = min(singles, key=singles.get)
+    print(f"  simulator pricing: mixed {mixed_s * 1e6:.2f} us <= best "
+          f"single {best_d!r} {singles[best_d] * 1e6:.2f} us")
+    assert mixed_s <= singles[best_d] * (1 + 1e-9)
+
     print("== distributed: mesh= partitions the plan across devices ==")
     # the dataflow's Partitioner shards the block grid (IP: output panels,
     # OP: k-slabs + psum merge, Gust: row bands); apply is one shard_map

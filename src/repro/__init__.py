@@ -14,7 +14,9 @@ Public operator surface (see DESIGN.md for the phase-1/phase-2 contract):
 - ``repro.memory`` — the 3-tier memory hierarchy: ``flexagon_plan(...,
   memory_budget=MemoryBudget(...))`` tiles out-of-core operations into a
   :class:`TiledPlan` (per-dataflow tile schedulers, lax.scan k-slab
-  streaming, L1/L2/DRAM traffic pricing);
+  streaming, L1/L2/DRAM traffic pricing); ``dataflow="mixed"`` makes
+  dataflow a *per-tile* decision — heterogeneous per-tile plans chosen by
+  the selection policy on each tile's own occupancy slice (DESIGN.md §14);
 - ``repro.dist`` — distributed plan execution: ``flexagon_plan(...,
   mesh=...)`` partitions the plan across a jax device mesh into a
   :class:`ShardedPlan` (per-dataflow shard strategies, one ``shard_map``

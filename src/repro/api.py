@@ -500,7 +500,9 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                   interpret: Optional[bool] = None,
                   memory_budget: Optional[Any] = None,
                   mesh: Optional[Any] = None,
-                  partition: Optional[Any] = None) -> FlexagonPlan:
+                  partition: Optional[Any] = None,
+                  tile_dataflows: Optional[Tuple[str, ...]] = None
+                  ) -> FlexagonPlan:
     """Phase 1, exactly once: inspect patterns, select, lay out, configure.
 
     ``a_spec``/``b_spec`` describe *patterns*: dense arrays (pattern from
@@ -521,6 +523,16 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     chosen dataflow's tile scheduler and a :class:`repro.memory.TiledPlan`
     is returned instead (same ``apply`` contract).  Policies see the budget
     in their :class:`SelectionContext` and rank dataflows by tiled traffic.
+
+    ``dataflow="mixed"`` (requires a ``memory_budget``) makes dataflow a
+    *per-tile* decision (DESIGN.md §14): the mixed scheduler tiles the
+    output grid into disjoint C regions and the policy's ``select_tile``
+    picks each tile's dataflow on the tile's own occupancy slice — the
+    returned ``TiledPlan`` composes heterogeneous per-tile plans into
+    per-group scan/unroll lanes.  A pattern that fits in one resident tile
+    degenerates to the policy's choice for that single tile.
+    ``tile_dataflows`` pins the mixed per-tile choices outright, skipping
+    the policy (callers that already ran the selection — ``PlanCache``).
 
     ``mesh`` (a jax device mesh) makes placement part of phase 1: the
     dataflow's :class:`repro.dist.Partitioner` splits the block grid into
@@ -551,7 +563,12 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     if not allowed:
         raise ValueError(f"backend {backend_obj.name!r} supports no dataflow "
                          f"at block_shape={tuple(block_shape)}")
-    if dataflow == "auto":
+    mixed = dataflow == "mixed"
+    if mixed and memory_budget is None:
+        raise ValueError(
+            "dataflow='mixed' requires a memory_budget: per-tile dataflow "
+            "choice lives at the tiling seam (DESIGN.md §14)")
+    if dataflow == "auto" or mixed:
         PHASE1_COUNTERS["selector"] += 1
     elif dataflow not in df.DATAFLOWS:
         raise ValueError(f"unknown dataflow {dataflow!r}")
@@ -560,7 +577,8 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                            backend=backend_obj, spec=spec, allowed=allowed,
                            memory_budget=memory_budget, mesh=mesh,
                            partition=partition)
-    dataflow = policy_obj.select(ctx)
+    if not mixed:
+        dataflow = policy_obj.select(ctx)
 
     if mesh is not None or partition is not None:
         from .dist.sharded_plan import plan_sharded   # lazy: dist uses api
@@ -570,7 +588,8 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                                block_shape=tuple(block_shape), mesh=mesh,
                                partition=partition, budget=memory_budget,
                                backend=backend_obj, interpret=interpret,
-                               fingerprint=fingerprint, spec=spec)
+                               fingerprint=fingerprint, spec=spec,
+                               policy=policy_obj)
         if sharded is not None:
             return sharded
 
@@ -581,9 +600,25 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                            shapes=(m, k, n), block_shape=tuple(block_shape),
                            budget=memory_budget, backend=backend_obj,
                            interpret=interpret, fingerprint=fingerprint,
-                           spec=spec)
+                           spec=spec, policy=policy_obj,
+                           tile_dataflows=tile_dataflows if mixed else None)
         if tiled is not None:
             return tiled
+
+    if mixed:
+        # the whole pattern fits in one resident tile — nothing to mix;
+        # degenerate to the policy's choice for that single tile (the same
+        # call PlanCache keys mixed plans by, so the cache identity and the
+        # built plan can never disagree)
+        if tile_dataflows:
+            dataflow = tile_dataflows[0]
+        else:
+            from .memory.tiled_plan import mixed_tile_dataflows
+
+            dataflow = mixed_tile_dataflows(
+                occ_a, occ_b, tuple(block_shape), memory_budget,
+                backend=backend_obj, policy=policy_obj, spec=spec,
+                fingerprint=fingerprint)[0]
 
     fmt_a, fmt_b = _TABLE3_FORMATS[dataflow]
     a_layout = CompressionLayout.from_bitmap(occ_a, (m, k), (bm, bk), fmt_a)
@@ -632,6 +667,14 @@ class PlanCache:
         self.spec = spec
         self.maxsize = maxsize
         self._plans: "OrderedDict[Tuple, Any]" = OrderedDict()
+        #: per-tile-choices memo for mixed lookups: repeat hits must not
+        #: re-run the mixed schedule + per-tile selection.  LRU-bounded so
+        #: a stream of distinct patterns (or per-request policy instances,
+        #: which the identity-hashed key pins alive) cannot grow it — nor
+        #: hold dead policies — without limit
+        self._mixed_choices: "OrderedDict[Tuple, Tuple[str, ...]]" = \
+            OrderedDict()
+        self._mixed_choices_cap = maxsize if maxsize is not None else 1024
         self.hits = 0
         self.builds = 0
         self.evictions = 0
@@ -666,11 +709,39 @@ class PlanCache:
         (_, n), occ_b = _pattern_of(b_spec, (bk, bn))
         backend_obj = _resolve_backend(backend, use_pallas)
         policy_obj = get_policy(policy, dataflow)
+        fingerprint = _fingerprint(occ_a, occ_b, (m, k, n),
+                                   tuple(block_shape))
+        policy_key: Any = policy_obj.cache_key
+        choices: Optional[Tuple[str, ...]] = None
+        if dataflow == "mixed" and memory_budget is not None \
+                and mesh is None and partition is None:
+            # mixed identity is the policy's *per-tile choices*: two
+            # policies that agree tile-by-tile share one plan.  Memoized so
+            # repeat lookups skip the mixed schedule + per-tile selection
+            from .memory.tiled_plan import mixed_tile_dataflows  # lazy
+
+            # the memo holds the policy *object* (identity-hashed): a
+            # string key could collide across short-lived instances, and
+            # the strong reference keeps each instance's choices its own
+            memo_key = (fingerprint, memory_budget, backend_obj.name,
+                        policy_obj, interpret)
+            choices = self._mixed_choices.get(memo_key)
+            if choices is None:
+                choices = mixed_tile_dataflows(
+                    occ_a, occ_b, tuple(block_shape), memory_budget,
+                    backend=backend_obj, policy=policy_obj, spec=self.spec,
+                    fingerprint=fingerprint)
+                self._mixed_choices[memo_key] = choices
+                if len(self._mixed_choices) > self._mixed_choices_cap:
+                    self._mixed_choices.popitem(last=False)
+            else:
+                self._mixed_choices.move_to_end(memo_key)
+            policy_key = ("mixed-tiles",) + choices
         # the mesh *shape* (device grid + axis names) and partition spec are
         # part of the plan's identity: a plan sharded for one mesh must
         # never be served for another
-        key = (_fingerprint(occ_a, occ_b, (m, k, n), tuple(block_shape)),
-               dataflow, backend_obj.name, policy_obj.cache_key, interpret,
+        key = (fingerprint,
+               dataflow, backend_obj.name, policy_key, interpret,
                memory_budget, mesh_key(mesh), partition)
         plan = self._plans.get(key)
         if plan is None:
@@ -679,7 +750,8 @@ class PlanCache:
                                  backend=backend_obj, policy=policy_obj,
                                  interpret=interpret,
                                  memory_budget=memory_budget,
-                                 mesh=mesh, partition=partition)
+                                 mesh=mesh, partition=partition,
+                                 tile_dataflows=choices)
             self._plans[key] = plan
             self.builds += 1
             if self.maxsize is not None and len(self._plans) > self.maxsize:

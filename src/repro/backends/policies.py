@@ -72,6 +72,13 @@ class SelectionContext:
     memory_budget: Optional[Any] = None
     mesh: Optional[Any] = None
     partition: Optional[Any] = None
+    #: a :class:`repro.memory.Tile` when this is a *per-tile* selection
+    #: inside a ``dataflow="mixed"`` plan (DESIGN.md §14): ``shape`` /
+    #: ``occ_a`` / ``occ_b`` / ``fingerprint`` then describe that tile's own
+    #: occupancy slice and ``memory_budget`` is ``None`` — the mixed
+    #: scheduler already shrank the tile until it is residency-feasible, so
+    #: policies price each candidate as one resident operation.
+    tile: Optional[Any] = None
 
     @property
     def n_shards(self) -> int:
@@ -95,6 +102,19 @@ class SelectionPolicy(abc.ABC):
     @abc.abstractmethod
     def select(self, ctx: SelectionContext) -> str:
         """Pick one dataflow from ``ctx.allowed``."""
+
+    def select_tile(self, ctx: SelectionContext) -> str:
+        """Pick one dataflow for a single tile of a ``"mixed"`` plan.
+
+        ``ctx`` carries the tile's own occupancy slice (``ctx.tile`` names
+        the tile) with no memory budget — the tile is residency-feasible by
+        construction, so the whole-operation ``select`` paths price it as
+        one resident operation: heuristic by the tile-shape roofline,
+        simulator by the tile's cycle model, autotune by measuring a
+        throwaway plan on the tile slice (cached by the tile fingerprint).
+        Policies with genuinely tile-specific logic override this.
+        """
+        return self.select(ctx)
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
                    spec: Optional[TPUSpec] = None,
@@ -348,11 +368,14 @@ def get_policy(policy: Union[str, SelectionPolicy, None],
 
     - an explicit non-"auto" ``dataflow`` pins a :class:`FixedPolicy`
       (and wins over ``policy``, matching the pre-seam API);
+    - ``dataflow="mixed"`` is *not* a pin: per-tile choices still need a
+      pricing policy, so ``policy`` resolves exactly as it would for
+      "auto" and the mixed planner calls its ``select_tile`` per tile;
     - ``policy`` may be a name ("heuristic" / "simulator" / "autotune" — or a
       dataflow name, shorthand for a fixed pin) or an instance;
     - neither given → :class:`HeuristicPolicy`.
     """
-    if dataflow != "auto":
+    if dataflow not in ("auto", "mixed"):
         return FixedPolicy(dataflow)
     if policy is None:
         policy = "heuristic"

@@ -94,7 +94,10 @@ class SimulatorBackend(ExecutionBackend):
         :class:`repro.memory.traffic.TiledSimReport` — per-tile results
         plus the aggregated L1/L2/DRAM :class:`TierTraffic` (the same
         numbers the ``simulator`` policy ranks dataflows by under a
-        budget).  A :class:`repro.dist.ShardedPlan` gets a
+        budget).  Each tile is priced under the dataflow it actually runs,
+        so mixed plans (DESIGN.md §14) report a per-tile dataflow
+        histogram (``dataflow_histogram``) and per-group tier traffic
+        (``per_group``).  A :class:`repro.dist.ShardedPlan` gets a
         :class:`repro.memory.traffic.ShardedSimReport` whose traffic adds
         the fourth (interconnect) tier — nonzero for k-slab partitions,
         whose partial sums all-reduce across the mesh.

@@ -45,11 +45,15 @@ __all__ = [
     "merge_ici_bytes",
 ]
 
-#: Partition axis per dataflow (see module docstring).
+#: Partition axis per dataflow (see module docstring).  ``"mixed"`` plans
+#: (heterogeneous per-tile dataflows, DESIGN.md §14) shard row bands of the
+#: output grid — disjoint C regions, no collective — so every shard is free
+#: to hold its own per-tile dataflow mix.
 DEFAULT_AXIS = {
     "ip_m": "n", "ip_n": "m",
     "op_m": "k", "op_n": "k",
     "gust_m": "m", "gust_n": "n",
+    "mixed": "m",
 }
 
 

@@ -36,29 +36,14 @@ from ..backends.base import TABLE3_FORMATS
 from ..core import dataflows as df
 from ..core.selector import DataflowEstimate, LayerShape, TPUSpec, estimate
 from ..memory.budget import MemoryBudget, output_bytes
-from ..memory.tiled_plan import (_pack_bitmap, _pad_layout, _pad_stream,
-                                 _stack_plans, _unpack_bitmap, plan_tiled)
+from ..memory.tiled_plan import (_build_sub_plan, _pack_bitmap, _pad_ip,
+                                 _pad_layout, _pad_stream, _stack_plans,
+                                 _unpack_bitmap, plan_tiled)
 from ..memory.tiling import Tile
 from .partition import (DistPartition, Partitioner, merge_ici_bytes,
                         mesh_device_count, resolve_shards)
 
 __all__ = ["ShardedPlan", "plan_sharded"]
-
-
-def _pad_ip(plan: df.IPPlan, p_max: int) -> df.IPPlan:
-    """Pad an IP intersection plan's pair axis to ``p_max`` slots.
-
-    Appended pairs point at slot 0 but are masked out by ``npairs`` in the
-    executor, so numerics are untouched; shapes (and the ``max_pairs``
-    treedef entry) become uniform across shards.
-    """
-    pad = p_max - plan.pair_a.shape[2]
-    if pad == 0 and plan.max_pairs == p_max:
-        return plan
-    wid = ((0, 0), (0, 0), (0, pad))
-    return df.IPPlan(np.pad(np.asarray(plan.pair_a, np.int32), wid),
-                     np.pad(np.asarray(plan.pair_b, np.int32), wid),
-                     np.asarray(plan.npairs, np.int32), p_max)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -118,11 +103,22 @@ class ShardedPlan:
 
     # -- phase-1 byproducts ----------------------------------------------
     @property
+    def is_mixed(self) -> bool:
+        """Heterogeneous per-tile dataflows inside the shards (§14)."""
+        return self.dataflow == "mixed"
+
+    @property
     def out_major(self) -> str:
+        if self.is_mixed:
+            return "csr"       # dense-assembled disjoint regions (cf. §14)
         return df.OUTPUT_MAJOR[self.dataflow]
 
     @property
     def formats(self):
+        from ..core.formats import SparseFormat
+
+        if self.is_mixed:
+            return (SparseFormat.BCSR, SparseFormat.BCSR)
         return TABLE3_FORMATS[self.dataflow]
 
     @property
@@ -182,8 +178,14 @@ class ShardedPlan:
 
     def with_backend(self, backend) -> "ShardedPlan":
         """Re-target onto another backend (re-partitions from the stored
-        bitmaps so each substrate gets the plan shapes it expects)."""
+        bitmaps so each substrate gets the plan shapes it expects).  Mixed
+        plans re-target shard by shard instead — each shard's per-tile
+        dataflow choices are pinned, never re-selected."""
         be = get_backend(backend)
+        if self.is_mixed:
+            plans = tuple(p.with_backend(be) for p in self.plans)
+            return dataclasses.replace(self, backend=be.name, plans=plans,
+                                       shard_ok=False, shard_stacked=None)
         return plan_sharded(
             dataflow=self.dataflow, occ_a=self.occ_a, occ_b=self.occ_b,
             shapes=self.shapes, block_shape=self.block_shape, mesh=self.mesh,
@@ -303,31 +305,39 @@ def plan_sharded(*, dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
                  partition: Optional[DistPartition],
                  budget: Optional[MemoryBudget], backend,
                  interpret: Optional[bool], fingerprint: str,
-                 spec: TPUSpec = TPUSpec()) -> Optional[ShardedPlan]:
+                 spec: TPUSpec = TPUSpec(), policy=None
+                 ) -> Optional[ShardedPlan]:
     """Phase 1 for the multi-device case.
 
     Returns ``None`` when the (mesh, partition) pair resolves to a single
     shard — the caller then builds an ordinary single-device plan.
+    ``dataflow="mixed"`` shards row bands of the output grid and lets each
+    shard hold its own per-tile dataflow mix (``policy`` prices the tiles);
+    mixed shards always take the serial-fallback apply.
     """
     part = Partitioner.for_dataflow(dataflow, partition)
     n_shards = resolve_shards(mesh, partition)
     if n_shards <= 1:
         return None
 
-    from ..api import CompressionLayout, FlexagonPlan, _build_index_plan
+    from ..api import FlexagonPlan
 
+    mixed = dataflow == "mixed"
+    if mixed and budget is None:
+        raise ValueError(
+            "dataflow='mixed' requires a memory_budget (DESIGN.md §14)")
     m, k, n = shapes
     bm, bk, bn = block_shape
-    fmt_a, fmt_b = TABLE3_FORMATS[dataflow]
     shard_slices = part.shard_bitmaps(occ_a, occ_b, n_shards)
     padded = part.padded_grid((occ_a.shape[0], occ_a.shape[1],
                                occ_b.shape[1]), n_shards)
 
     # one shared estimate + fingerprint keeps per-shard treedefs identical,
     # which is what lets the plans stack into one shard_map (cf. the OP
-    # k-slab scan in repro.memory.tiled_plan)
+    # k-slab scan in repro.memory.tiled_plan); mixed shards never stack, so
+    # they keep per-shard estimates instead
     t0 = shard_slices[0][0]
-    shared_est = estimate(
+    shared_est = None if mixed else estimate(
         LayerShape(m=(t0.i1 - t0.i0) * bm, k=(t0.k1 - t0.k0) * bk,
                    n=(t0.j1 - t0.j0) * bn,
                    density_a=float(occ_a.mean()) if occ_a.size else 0.0,
@@ -347,26 +357,30 @@ def plan_sharded(*, dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
                              block_shape=tuple(block_shape), budget=budget,
                              backend=backend, interpret=interpret,
                              fingerprint=f"{fingerprint}/shard{idx}",
-                             spec=spec)
+                             spec=spec, policy=policy)
         if sub is not None:
             tiled_any = True
         else:
-            a_layout = CompressionLayout.from_bitmap(occ_at, shape_a,
-                                                     (bm, bk), fmt_a)
-            b_layout = CompressionLayout.from_bitmap(occ_bt, shape_b,
-                                                     (bk, bn), fmt_b)
-            index_plan = _build_index_plan(dataflow, a_layout, b_layout)
-            sub = FlexagonPlan(
-                dataflow=dataflow, a_layout=a_layout, b_layout=b_layout,
-                index_plan=index_plan, aux=None, estimate=shared_est,
-                fingerprint=f"{fingerprint}/shard",
-                shapes=(shape_a[0], shape_a[1], shape_b[1]),
-                block_shape=tuple(block_shape), backend=backend.name,
-                interpret=interpret)
+            d = dataflow
+            if mixed:
+                # this shard's slice fits in one resident tile: its "mix"
+                # is the policy's single choice for the slice
+                from ..memory.tiled_plan import mixed_tile_dataflows
+
+                d = mixed_tile_dataflows(
+                    occ_at, occ_bt, tuple(block_shape), budget,
+                    backend=backend, policy=policy, spec=spec,
+                    fingerprint=f"{fingerprint}/shard{idx}",
+                    tiles=[Tile(0, occ_at.shape[0], 0, occ_at.shape[1],
+                                0, occ_bt.shape[1])])[0]
+            sub = _build_sub_plan(
+                d, occ_at, occ_bt, tuple(block_shape), backend,
+                f"{fingerprint}/shard", interpret, spec, est=shared_est)
         plans.append(sub)
 
     shard_ok = False
-    if not tiled_any and getattr(backend, "collective_merge", False):
+    if not mixed and not tiled_any \
+            and getattr(backend, "collective_merge", False):
         nnz_a = max(p.a_layout.nnzb for p in plans)
         nnz_b = max(p.b_layout.nnzb for p in plans)
         for p in plans:

@@ -16,16 +16,21 @@ The memory-hierarchy layer between plans and backends (DESIGN.md §12):
 
 Entry point: ``flexagon_plan(a, b, memory_budget=MemoryBudget(...))``
 auto-tiles whenever the pattern exceeds the budget.
+``flexagon_plan(a, b, dataflow="mixed", memory_budget=...)`` additionally
+makes dataflow a *per-tile* decision (DESIGN.md §14): the
+:class:`MixedTileScheduler` tiles the output grid into disjoint C regions
+and the selection policy's ``select_tile`` picks each tile's dataflow on
+the tile's own occupancy slice.
 """
 from .budget import MemoryBudget, PAPER_BUDGET, operand_bytes, output_bytes
-from .tiled_plan import TiledPlan, plan_tiled
-from .tiling import (GustTileScheduler, IPTileScheduler, OPTileScheduler,
-                     Tile, TileMergePlan, TileScheduler, get_scheduler,
-                     schedule)
+from .tiled_plan import TiledPlan, mixed_tile_dataflows, plan_tiled
+from .tiling import (GustTileScheduler, IPTileScheduler, MixedTileScheduler,
+                     OPTileScheduler, Tile, TileMergePlan, TileScheduler,
+                     get_scheduler, schedule)
 from .traffic import (ShardedSimReport, TierTraffic, TiledSimReport,
-                      plan_traffic, sharded_estimate, sharded_plan_traffic,
-                      sharded_traffic, synthetic_occupancy, tiled_estimate,
-                      tiled_traffic)
+                      mixed_tile_choices, plan_traffic, sharded_estimate,
+                      sharded_plan_traffic, sharded_traffic,
+                      synthetic_occupancy, tiled_estimate, tiled_traffic)
 
 __all__ = [
     "MemoryBudget",
@@ -38,10 +43,13 @@ __all__ = [
     "IPTileScheduler",
     "OPTileScheduler",
     "GustTileScheduler",
+    "MixedTileScheduler",
     "get_scheduler",
     "schedule",
     "TiledPlan",
     "plan_tiled",
+    "mixed_tile_dataflows",
+    "mixed_tile_choices",
     "TierTraffic",
     "TiledSimReport",
     "ShardedSimReport",

@@ -22,6 +22,15 @@ sparse accelerator practical at real layer sizes):
 N-stationary variants schedule the transposed problem (the paper: "in the
 same manner by exchanging matrices A and B") and map the tiles back.
 
+- **mixed** (``dataflow="mixed"``) — output-grid tiling for *heterogeneous*
+  per-tile dataflows (DESIGN.md §14): split M × N with full K per tile, so
+  every tile owns a disjoint C region.  Disjoint outputs are the one tiling
+  under which any per-tile dataflow choice stays merge-compatible — there
+  are no cross-tile partial sums whose accumulation order the per-tile
+  dataflows would have to agree on, so the selection policy is free to pick
+  a different dataflow for every tile (SegFold's fine-grained dynamic
+  selection at our tile seam).
+
 Schedulers work at *pattern granularity*: footprints come from block
 occupancy bitmap slices, never from values.  Split counts refine
 geometrically (doubling) on whichever tier is violated, down to single-block
@@ -45,6 +54,7 @@ __all__ = [
     "IPTileScheduler",
     "OPTileScheduler",
     "GustTileScheduler",
+    "MixedTileScheduler",
     "get_scheduler",
     "schedule",
 ]
@@ -230,8 +240,69 @@ class GustTileScheduler(TileScheduler):
             s = min(mb, s * 2)
 
 
+class MixedTileScheduler(TileScheduler):
+    """Output-grid tiling for heterogeneous per-tile dataflows.
+
+    Splits M (× N only as a last resort) with full K per tile, so tiles own
+    disjoint C regions — see the module docstring.  The footprint check is
+    the most *permissive* of the per-family residency requirements — the
+    stationary A stripe in L1 and the touched-B working set in L2, i.e. the
+    Gust test generalized to output-column slices: a tile is accepted as
+    soon as at least one candidate dataflow can hold it resident, and the
+    tiling stays as coarse as the coarsest single-dataflow scheduler's —
+    which is what lets the per-tile argmin beat every single-dataflow plan
+    instead of drowning the gain in extra re-streaming.
+    """
+
+    def _feasible(self, occ_a, occ_b, block_shape, rows, cols) -> bool:
+        """Every tile resident under *some* family (M-dual OR N-dual)."""
+        bm, bk, bn = block_shape
+        dt = self.budget.dtype_bytes
+        for i0, i1 in rows:
+            a_stripe = operand_bytes(occ_a[i0:i1], (bm, bk), dt)
+            touched_b = occ_a[i0:i1].any(axis=0)     # leader's K fibers
+            for j0, j1 in cols:
+                # M-dual (gust_m-style): A stripe stationary in L1, the
+                # touched B working set streaming through L2
+                if a_stripe <= self.budget.l1_bytes \
+                        and operand_bytes(occ_b[touched_b][:, j0:j1],
+                                          (bk, bn), dt) \
+                        <= self.budget.l2_bytes:
+                    continue
+                # N-dual (gust_n-style): B column stripe stationary, the
+                # touched A working set streaming
+                touched_a = occ_b[:, j0:j1].any(axis=1)
+                if operand_bytes(occ_b[:, j0:j1], (bk, bn), dt) \
+                        <= self.budget.l1_bytes \
+                        and operand_bytes(occ_a[i0:i1][:, touched_a],
+                                          (bm, bk), dt) \
+                        <= self.budget.l2_bytes:
+                    continue
+                return False
+        return True
+
+    def tiles(self, occ_a, occ_b, block_shape) -> List[Tile]:
+        mb, kb = occ_a.shape
+        _, nb = occ_b.shape
+        # coarsest feasible output grid: geometric split candidates on both
+        # axes, fewest tiles wins; ties prefer M splits (row bands keep the
+        # per-band sparsity contrast that makes mixing pay off)
+        splits = lambda nblk: sorted({min(nblk, 1 << p)
+                                      for p in range(nblk.bit_length() + 1)})
+        grids = sorted(((len(_ranges(mb, si)) * len(_ranges(nb, sj)), sj, si)
+                        for si in splits(mb) for sj in splits(nb)))
+        for _, sj, si in grids:
+            rows, cols = _ranges(mb, si), _ranges(nb, sj)
+            if self._feasible(occ_a, occ_b, block_shape, rows, cols):
+                break
+        else:                              # single-block tiles: accept spills
+            rows, cols = _ranges(mb, mb), _ranges(nb, nb)
+        return [Tile(i0, i1, 0, kb, j0, j1)
+                for i0, i1 in rows for j0, j1 in cols]
+
+
 _SCHEDULERS = {"ip": IPTileScheduler, "op": OPTileScheduler,
-               "gust": GustTileScheduler}
+               "gust": GustTileScheduler, "mixed": MixedTileScheduler}
 
 
 def get_scheduler(dataflow: str, budget: MemoryBudget) -> TileScheduler:

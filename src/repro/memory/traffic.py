@@ -29,7 +29,8 @@ only shape features exist (the ``plan_network`` DP): per-tile
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from collections import Counter
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -46,6 +47,7 @@ __all__ = [
     "tiled_traffic",
     "plan_traffic",
     "tiled_estimate",
+    "mixed_tile_choices",
     "sharded_traffic",
     "sharded_plan_traffic",
     "sharded_estimate",
@@ -84,11 +86,21 @@ class TierTraffic:
 
 @dataclasses.dataclass
 class TiledSimReport:
-    """``SimulatorBackend.report`` result for a tiled plan."""
+    """``SimulatorBackend.report`` result for a tiled plan.
+
+    ``tile_dataflows`` names the dataflow each tile ran (all equal for
+    single-dataflow plans, the policy's per-tile choices for ``"mixed"``);
+    ``per_group`` re-aggregates the per-tile results into one
+    :class:`TierTraffic` per distinct dataflow, so a mixed report shows
+    where each lane's traffic went (DESIGN.md §14).
+    """
 
     dataflow: str
     per_tile: List                      # SimResult per tile
     traffic: TierTraffic
+    tile_dataflows: Tuple[str, ...] = ()
+    per_group: Dict[str, TierTraffic] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def cycles(self) -> float:
@@ -97,6 +109,11 @@ class TiledSimReport:
     @property
     def n_tiles(self) -> int:
         return self.traffic.tiles
+
+    @property
+    def dataflow_histogram(self) -> Dict[str, int]:
+        """Tile count per dataflow (the ``tile_dataflows`` bench field)."""
+        return dict(Counter(self.tile_dataflows))
 
 
 def _tile_result(dataflow: str, dims: Tuple[int, int, int],
@@ -147,25 +164,70 @@ def _occ_density(occ: np.ndarray) -> float:
     return float(occ.mean()) if occ.size else 0.0
 
 
+def mixed_tile_choices(occ_a: np.ndarray, occ_b: np.ndarray,
+                       block_shape: Tuple[int, int, int],
+                       budget: MemoryBudget,
+                       cfg: AcceleratorConfig = PAPER_CONFIG, seed: int = 0,
+                       allowed: Sequence[str] = None, tiles=None
+                       ) -> Tuple[str, ...]:
+    """Cycle-model argmin dataflow per mixed-schedule tile.
+
+    The policy-free pricing counterpart of
+    :func:`repro.memory.tiled_plan.mixed_tile_dataflows` — equivalent to
+    what the ``simulator`` policy's ``select_tile`` picks (same cycle
+    models, same seed-0 sampled patterns); used where only a traffic
+    estimate is wanted (``tiled_traffic("mixed", ...)``, the bench rows).
+    ``tiles`` skips the schedule when the caller already ran it.
+    """
+    from ..core.dataflows import DATAFLOWS
+
+    allowed = tuple(allowed) if allowed else tuple(DATAFLOWS)
+    bm, bk, bn = block_shape
+    if tiles is None:
+        tiles, _ = schedule("mixed", occ_a, occ_b, block_shape, budget)
+    choices = []
+    for tile in tiles:
+        occ_at = tile.a_slice(occ_a)
+        occ_bt = tile.b_slice(occ_b)
+        dims = ((tile.i1 - tile.i0) * bm, (tile.k1 - tile.k0) * bk,
+                (tile.j1 - tile.j0) * bn)
+        da, db = _occ_density(occ_at), _occ_density(occ_bt)
+        choices.append(min(allowed, key=lambda d: (
+            _tile_result(d, dims, da, db, cfg, seed).cycles, d)))
+    return tuple(choices)
+
+
 def tiled_traffic(dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
                   block_shape: Tuple[int, int, int], budget: MemoryBudget,
-                  cfg: AcceleratorConfig = PAPER_CONFIG, seed: int = 0
+                  cfg: AcceleratorConfig = PAPER_CONFIG, seed: int = 0,
+                  tile_dataflows: Optional[Sequence[str]] = None
                   ) -> TierTraffic:
     """Schedule ``dataflow`` under ``budget`` and price the tile stream.
 
     Tile dimensions come from the bitmaps and block shape alone.
     Deterministic for fixed inputs (tile patterns are seeded samples at the
     tile's density, exactly like ``SimulatorBackend.cost``).
+    ``dataflow="mixed"`` prices each tile under its own dataflow —
+    ``tile_dataflows`` pins the choices, else the cycle-model argmin per
+    tile (:func:`mixed_tile_choices`).
     """
     bm, bk, bn = block_shape
     tiles, merge_plan = schedule(dataflow, occ_a, occ_b, block_shape, budget)
+    if dataflow == "mixed" and tile_dataflows is None:
+        tile_dataflows = mixed_tile_choices(occ_a, occ_b, block_shape,
+                                            budget, cfg, seed, tiles=tiles)
+    if tile_dataflows is None:
+        tile_dataflows = (dataflow,) * len(tiles)
+    elif len(tile_dataflows) != len(tiles):
+        raise ValueError(f"got {len(tile_dataflows)} pinned dataflows for "
+                         f"{len(tiles)} scheduled tiles")
     results = []
-    for tile in tiles:
+    for tile, d in zip(tiles, tile_dataflows):
         occ_at = tile.a_slice(occ_a)
         occ_bt = tile.b_slice(occ_b)
         dims = ((tile.i1 - tile.i0) * bm, occ_at.shape[1] * bk,
                 (tile.j1 - tile.j0) * bn)
-        results.append(_tile_result(dataflow, dims, _occ_density(occ_at),
+        results.append(_tile_result(d, dims, _occ_density(occ_at),
                                     _occ_density(occ_bt), cfg, seed))
     merge = _merge_dram_bytes(
         merge_plan, _region_c_bytes(merge_plan, occ_a, occ_b, block_shape,
@@ -175,25 +237,40 @@ def tiled_traffic(dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
 
 def plan_traffic(plan, cfg: AcceleratorConfig = PAPER_CONFIG,
                  seed: int = 0) -> TiledSimReport:
-    """Per-tile cycle models + tier aggregation for a built ``TiledPlan``."""
+    """Per-tile cycle models + tier aggregation for a built ``TiledPlan``.
+
+    Each tile is priced under the dataflow it actually runs
+    (``plan.tile_dataflows`` — heterogeneous for mixed plans), and the
+    report re-aggregates per distinct dataflow in ``per_group``.
+    """
     occ_a, occ_b = plan.occ_a, plan.occ_b
     bm, bk, bn = plan.block_shape
+    tile_dataflows = tuple(getattr(plan, "tile_dataflows", ())) \
+        or (plan.dataflow,) * len(plan.tiles)
     results = []
-    for tile, sub in zip(plan.tiles, plan.plans):
+    for tile, sub, d in zip(plan.tiles, plan.plans, tile_dataflows):
         occ_at = occ_a[tile.i0: tile.i1, tile.k0: min(tile.k1,
                                                       occ_a.shape[1])]
         occ_bt = occ_b[tile.k0: min(tile.k1, occ_b.shape[0]),
                        tile.j0: tile.j1]
-        results.append(_tile_result(plan.dataflow, sub.shapes,
+        results.append(_tile_result(d, sub.shapes,
                                     _occ_density(occ_at),
                                     _occ_density(occ_bt), cfg, seed))
     merge = _merge_dram_bytes(
         plan.merge_plan,
         _region_c_bytes(plan.merge_plan, occ_a, occ_b, plan.block_shape,
                         plan.budget.dtype_bytes))
+    per_group: Dict[str, TierTraffic] = {}
+    for d in dict.fromkeys(tile_dataflows):        # insertion order
+        group = [r for r, dd in zip(results, tile_dataflows) if dd == d]
+        # the cross-tile merge is a whole-plan cost; attribute it to the
+        # aggregate only (mixed plans have none — disjoint C regions)
+        per_group[d] = _aggregate(d, group, 0.0, cfg)
     return TiledSimReport(dataflow=plan.dataflow, per_tile=results,
                           traffic=_aggregate(plan.dataflow, results, merge,
-                                             cfg))
+                                             cfg),
+                          tile_dataflows=tile_dataflows,
+                          per_group=per_group)
 
 
 @dataclasses.dataclass
@@ -222,11 +299,17 @@ class ShardedSimReport:
 def _shard_tier(dataflow: str, tile, occ_at: np.ndarray, occ_bt: np.ndarray,
                 block_shape: Tuple[int, int, int],
                 budget: Optional[MemoryBudget],
-                cfg: AcceleratorConfig, seed: int) -> TierTraffic:
-    """One shard's tier traffic: tiled under its budget, single-tile else."""
+                cfg: AcceleratorConfig, seed: int,
+                tile_dataflows: Optional[Sequence[str]] = None
+                ) -> TierTraffic:
+    """One shard's tier traffic: tiled under its budget, single-tile else.
+
+    ``tile_dataflows`` pins the shard's per-tile choices (mixed sharded
+    plans price what each tile *actually* runs, not the argmin re-derive).
+    """
     if budget is not None:
         return tiled_traffic(dataflow, occ_at, occ_bt, block_shape, budget,
-                             cfg, seed)
+                             cfg, seed, tile_dataflows=tile_dataflows)
     bm, bk, bn = block_shape
     dims = ((tile.i1 - tile.i0) * bm, (tile.k1 - tile.k0) * bk,
             (tile.j1 - tile.j0) * bn)
@@ -297,12 +380,19 @@ def sharded_plan_traffic(plan, cfg: AcceleratorConfig = PAPER_CONFIG,
     # built them (raw bitmap slicing would hand the tile schedulers
     # zero-size grids for padding-only shards)
     part = Partitioner(plan.dataflow, axis=plan.axis, shards=plan.n_shards)
+    shard_choices: List[Optional[Tuple[str, ...]]] = [None] * plan.n_shards
+    if plan.dataflow == "mixed":
+        # each shard's per-tile choices come from its built sub-plan —
+        # price what the tiles actually run, never the argmin re-derive
+        shard_choices = [
+            tuple(getattr(sub, "tile_dataflows", ()) or (sub.dataflow,))
+            for sub in plan.plans]
     per_shard = [
         _shard_tier(plan.dataflow, tile, occ_at, occ_bt, plan.block_shape,
-                    plan.budget, cfg, seed)
-        for tile, occ_at, occ_bt in part.shard_bitmaps(plan.occ_a,
-                                                       plan.occ_b,
-                                                       plan.n_shards)]
+                    plan.budget, cfg, seed, tile_dataflows=choices)
+        for (tile, occ_at, occ_bt), choices in zip(
+            part.shard_bitmaps(plan.occ_a, plan.occ_b, plan.n_shards),
+            shard_choices)]
     return ShardedSimReport(
         dataflow=plan.dataflow, axis=plan.axis, shards=plan.n_shards,
         per_shard=per_shard,
@@ -369,8 +459,12 @@ def tiled_estimate(shape: LayerShape, dataflow: str, budget: MemoryBudget,
 
     Summing per-tile estimates naturally charges cross-tile re-streaming —
     operand stripes shared by several tiles are counted once per tile — and
-    the cross-tile merge rides in ``bytes_psum``.
+    the cross-tile merge rides in ``bytes_psum``.  ``dataflow="mixed"``
+    prices each tile under its roofline-argmin dataflow (the heuristic
+    policy's per-tile choice rule).
     """
+    from ..core.dataflows import DATAFLOWS
+
     spec = spec or TPUSpec()
     bm, bk, bn = shape.block
     mb, kb, nb = shape.grid
@@ -390,7 +484,11 @@ def tiled_estimate(shape: LayerShape, dataflow: str, budget: MemoryBudget,
                          density_a=_occ_density(occ_at),
                          density_b=_occ_density(occ_bt),
                          block=shape.block)
-        e = estimate(sub, dataflow, spec)
+        if dataflow == "mixed":
+            e = min((estimate(sub, d, spec) for d in DATAFLOWS),
+                    key=lambda est: (est.time_s, est.dataflow))
+        else:
+            e = estimate(sub, dataflow, spec)
         if agg is None:
             agg = dataclasses.replace(e)
         else:

@@ -76,6 +76,10 @@ class ServeEngine:
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
+        # the cache dtype is part of the engine's contract: prefill builds
+        # its batch-1 caches with the same dtype, so prefill compute and the
+        # slot write agree (no silent default-dtype prefill + cast-at-write)
+        self.dtype = dtype
         self.cache = model.init_cache(slots, max_seq, dtype)
         self._free = deque(range(slots))
         self._active: Dict[int, Request] = {}
@@ -155,18 +159,32 @@ class ServeEngine:
         if self.sparse_ffn is not None:
             self.sparse_ffn.specialize(len(req.prompt))
             self._sync_plan_stats()
-        one_cache = model.init_cache(1, self.max_seq)
+        one_cache = model.init_cache(1, self.max_seq, self.dtype)
         tokens = jnp.asarray(req.prompt, jnp.int32)[None]
         logits, one_cache = model.prefill(self.params, tokens, one_cache)
         next_tok = int(jnp.argmax(logits[0, -1]))
         req.out_tokens.append(next_tok)
-        slot = req.slot
+        self._write_slot(req.slot, one_cache)
+        self._set_pos(req.slot, len(req.prompt))
+        self.stats["prefills"] += 1
+
+    def _write_slot(self, slot: int, one_cache, replace_full: bool = True):
+        """Write every leaf of a batch-1 cache into this slot's cache lines.
+
+        An unmatched non-scalar leaf is a hard error: silently skipping the
+        write would leave the slot decoding against a stale/zero prefix with
+        no signal at all (the exact failure mode the loud path prevents).
+        ``replace_full=False`` leaves shape-identical leaves untouched
+        instead of replacing them — a leaf with the same shape at batch 1
+        and batch ``slots`` is slot-independent, and a slot reset must not
+        clobber it for the still-active slots.
+        """
 
         def write(full, one):
             if one.ndim == 0:
                 return full
             if one.shape == full.shape:      # slots == 1: replace outright
-                return one.astype(full.dtype)
+                return one.astype(full.dtype) if replace_full else full
             # batch dim = the unique dim where full is `slots` wide and the
             # batch-1 cache is 1 wide, with all other dims matching
             cands = [d for d in range(full.ndim)
@@ -174,7 +192,12 @@ class ServeEngine:
                      and full.shape[:d] == one.shape[:d]
                      and full.shape[d + 1:] == one.shape[d + 1:]]
             if not cands:
-                return full
+                raise ValueError(
+                    f"cannot locate the batch dim of cache leaf with shape "
+                    f"{tuple(one.shape)} against slot cache leaf "
+                    f"{tuple(full.shape)} (slots={self.slots}); refusing to "
+                    "skip the write — the slot would decode against a "
+                    "stale prefix")
             b_idx = cands[0]
             idx = [slice(None)] * full.ndim
             idx[b_idx] = slot
@@ -191,11 +214,30 @@ class ServeEngine:
                 if k in ("pos", "mem_len"):
                     continue
                 self.cache[k] = write(self.cache[k], one_cache[k])
+
+    def _set_pos(self, slot: int, value: int):
         pos = np.asarray(self.cache["pos"]).copy()
-        pos[slot] = len(req.prompt)
+        pos[slot] = value
         self.cache["pos"] = jnp.asarray(pos, jnp.int32)
-        self._positions[slot] = len(req.prompt)
-        self.stats["prefills"] += 1
+        self._positions[slot] = value
+
+    def _reset_slot(self, slot: int):
+        """Return a freed slot to the deterministic zero state.
+
+        The fused decode keeps running over free slots (the batch shape is
+        fixed), so without a reset a freed slot's cache lines and ``pos``
+        would drift with however long it sat idle — reused-slot decode
+        correctness would rest on prefill happening to overwrite every
+        leaf.  Zeroing cache + pos on free (and re-pinning ``pos`` after
+        every fused step) makes slot state independent of slot history.
+        ``replace_full`` only with one slot total: a shape-identical leaf
+        is slot-independent and must survive the reset for the still-active
+        slots, but with a single slot whole-leaf zeroing *is* the reset.
+        """
+        self._write_slot(slot, self.model.init_cache(1, self.max_seq,
+                                                     self.dtype),
+                         replace_full=self.slots == 1)
+        self._set_pos(slot, 0)
 
     # -- decode loop -----------------------------------------------------------
     def step(self) -> List[Tuple[int, int]]:
@@ -225,6 +267,16 @@ class ServeEngine:
             self._finished.append(self._active[slot])
             del self._active[slot]
             self._free.append(slot)
+            self._reset_slot(slot)
+        # free slots rode the fused step too (the batch shape is fixed, so
+        # their lane is dead compute); undo the pos side effect so an idle
+        # slot's state cannot drift between occupancies.  Stays on device —
+        # no host round trip on the hot decode path.
+        if len(self._active) < self.slots:
+            active = np.zeros(self.slots, bool)
+            active[list(self._active)] = True
+            self.cache["pos"] = jnp.where(jnp.asarray(active),
+                                          self.cache["pos"], 0)
         self._admit()
         return out
 

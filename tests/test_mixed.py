@@ -1,0 +1,335 @@
+"""``dataflow="mixed"`` — per-tile dataflow selection (DESIGN.md §14).
+
+The contract under test: a mixed plan tiles the output grid into disjoint C
+regions, the selection policy picks each tile's dataflow on the tile's own
+occupancy slice, ``apply`` matches the dense reference for every operand
+format and tile-count regime, and on a heterogeneous synthetic pattern the
+simulator prices the mixed plan no worse than every single-dataflow plan
+(the payoff criterion of the mixed mode).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro import (MemoryBudget, PlanCache, ShardedPlan, SparseOperand,
+                   TiledPlan, flexagon_plan, get_backend)
+from repro.backends.policies import HeuristicPolicy, SelectionPolicy
+from repro.core import dataflows as df
+from repro.core.formats import block_occupancy, random_sparse_dense
+from repro.memory import (TiledSimReport, mixed_tile_choices,
+                          mixed_tile_dataflows, schedule, tiled_traffic)
+
+BS = (8, 8, 8)
+
+#: Budgets sized for the heterogeneous case below: 2 row bands / 4 tiles /
+#: dozens of tiles (cf. the scheduler's coarsest-feasible-grid search).
+TWO = MemoryBudget(l1_bytes=20000, l2_bytes=40000)
+FOUR = MemoryBudget(l1_bytes=10000, l2_bytes=40000)
+MANY = MemoryBudget(l1_bytes=5000, l2_bytes=20000)
+HUGE = MemoryBudget(l1_bytes=1 << 30, l2_bytes=1 << 30)
+
+
+def _hetero_case(seed=3, m=96, k=96, n=96):
+    """Dense band + uniform-sparse remainder in A, near-dense B — the band
+    and the remainder sit on different sides of the per-dataflow cycle-cost
+    boundary, so per-tile selection has something to gain."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros((m, k), np.float32)
+    a[: m // 2] = rng.standard_normal((m // 2, k))
+    a[m // 2:] = random_sparse_dense(rng, (m - m // 2, k), density=0.5,
+                                     block_shape=BS[:2])
+    b = random_sparse_dense(rng, (k, n), density=0.9, block_shape=BS[1:])
+    return a, b
+
+
+def _report_time(plan):
+    sim = get_backend("simulator")
+    cfg = sim.cfg
+    rep = sim.report(plan if plan.backend == "simulator"
+                     else plan.with_backend("simulator"))
+    if isinstance(plan, TiledPlan):
+        return rep.traffic.time_s(cfg)
+    return rep.cycles / cfg.freq_hz
+
+
+# ---------------------------------------------------------------------------
+# Scheduler + API surface
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_requires_budget():
+    a, b = _hetero_case()
+    with pytest.raises(ValueError, match="memory_budget"):
+        flexagon_plan(a, b, dataflow="mixed", block_shape=BS)
+
+
+def test_mixed_scheduler_tiles_output_grid():
+    a, b = _hetero_case()
+    occ_a = block_occupancy(a, BS[:2])
+    occ_b = block_occupancy(b, BS[1:])
+    tiles, merge = schedule("mixed", occ_a, occ_b, BS, FOUR)
+    assert len(tiles) >= 2
+    kb = occ_a.shape[1]
+    # full K per tile, disjoint C regions: nothing to merge across tiles
+    assert all(t.k0 == 0 and t.k1 == kb for t in tiles)
+    assert merge.n_regions == len(tiles)
+    assert merge.max_contributions == 1
+    # tiles cover the whole output grid
+    covered = np.zeros((occ_a.shape[0], occ_b.shape[1]), dtype=bool)
+    for t in tiles:
+        assert not covered[t.i0:t.i1, t.j0:t.j1].any()
+        covered[t.i0:t.i1, t.j0:t.j1] = True
+    assert covered.all()
+
+
+@pytest.mark.parametrize("fmt", ["bcsr", "bcsc"])
+@pytest.mark.parametrize("budget,lo", [(HUGE, 1), (TWO, 2), (MANY, 5)])
+def test_mixed_parity_formats_and_budgets(fmt, budget, lo):
+    a, b = _hetero_case()
+    a_op = SparseOperand.from_dense(a, format=fmt, block_shape=BS[:2])
+    plan = flexagon_plan(a_op, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=budget)
+    if lo == 1:
+        # fits in one resident tile: degenerates to a single-dataflow plan
+        assert not isinstance(plan, TiledPlan)
+        assert plan.dataflow in df.DATAFLOWS
+    else:
+        assert isinstance(plan, TiledPlan) and plan.dataflow == "mixed"
+        assert plan.n_tiles >= lo
+        assert len(plan.tile_dataflows) == plan.n_tiles
+        assert set(plan.tile_dataflows) <= set(df.DATAFLOWS)
+    out = np.asarray(plan.apply(a_op, b))
+    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-3)
+    out_jit = np.asarray(jax.jit(plan.apply)(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(out_jit, a @ b, rtol=1e-3, atol=1e-3)
+    # same pattern, new values — plans reuse like any other plan
+    out2 = np.asarray(plan.apply(a * -0.5, b * 2.0))
+    np.testing.assert_allclose(out2, (a * -0.5) @ (b * 2.0),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mixed_heterogeneous_choices_and_pricing():
+    """The payoff criterion: on the heterogeneous pattern the policy picks
+    at least two distinct dataflows, and the simulator prices the mixed
+    plan no worse than every single-dataflow plan."""
+    a, b = _hetero_case()
+    plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=TWO, policy="simulator",
+                         backend="simulator")
+    assert isinstance(plan, TiledPlan)
+    hist = plan.tile_histogram
+    assert len(hist) >= 2, hist
+    assert sum(hist.values()) == plan.n_tiles
+    mixed_t = _report_time(plan)
+    for d in df.DATAFLOWS:
+        single = flexagon_plan(a, b, dataflow=d, block_shape=BS,
+                               memory_budget=TWO, backend="simulator")
+        assert mixed_t <= _report_time(single) * (1 + 1e-9), d
+    # report carries the per-tile histogram and per-group tier traffic
+    rep = get_backend("simulator").report(plan)
+    assert isinstance(rep, TiledSimReport)
+    assert rep.dataflow_histogram == hist
+    assert set(rep.per_group) == set(hist)
+    assert rep.traffic.merge_bytes == 0.0        # disjoint C regions
+    total_group_cycles = sum(t.cycles for t in rep.per_group.values())
+    assert total_group_cycles == pytest.approx(rep.traffic.cycles)
+
+
+def test_mixed_traffic_helpers():
+    a, b = _hetero_case()
+    occ_a = block_occupancy(a, BS[:2])
+    occ_b = block_occupancy(b, BS[1:])
+    cfg = get_backend("simulator").cfg
+    choices = mixed_tile_choices(occ_a, occ_b, BS, TWO, cfg)
+    assert len(choices) >= 2 and set(choices) <= set(df.DATAFLOWS)
+    t = tiled_traffic("mixed", occ_a, occ_b, BS, TWO, cfg)
+    assert t.merge_bytes == 0.0 and t.tiles == len(choices)
+    # pinned choices are what the default pricing uses
+    t2 = tiled_traffic("mixed", occ_a, occ_b, BS, TWO, cfg,
+                       tile_dataflows=choices)
+    assert t2.cycles == t.cycles
+    # the simulator policy's per-tile picks equal the cycle-model argmin
+    be = get_backend("simulator")
+    assert mixed_tile_dataflows(occ_a, occ_b, BS, TWO, backend=be,
+                                policy="simulator") == choices
+
+
+def test_selection_context_carries_tile():
+    calls = []
+
+    class _Spy(HeuristicPolicy):
+        def select_tile(self, ctx):
+            calls.append(ctx)
+            return super().select_tile(ctx)
+
+    a, b = _hetero_case()
+    plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=FOUR, policy=_Spy())
+    assert isinstance(plan, TiledPlan)
+    assert len(calls) == plan.n_tiles
+    for ctx, tile in zip(calls, plan.tiles):
+        assert ctx.tile == tile
+        assert ctx.memory_budget is None         # tile is resident
+        assert ctx.occ_a.shape == (tile.i1 - tile.i0, tile.k1 - tile.k0)
+        assert ctx.occ_b.shape == (tile.k1 - tile.k0, tile.j1 - tile.j0)
+
+
+# ---------------------------------------------------------------------------
+# Execution lanes, backends, pytree
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_scan_lanes_on_reference_unroll_on_pallas():
+    a, b = _hetero_case()
+    plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=MANY)
+    assert isinstance(plan, TiledPlan)
+    # reference scans: every multi-tile uniform-extent group rides a lane
+    lanes = dict((d, len(i)) for d, i in plan.scan_group_meta)
+    assert any(n > 1 for n in lanes.values())
+    ref = np.asarray(plan.apply(a, b))
+    np.testing.assert_allclose(ref, a @ b, rtol=1e-3, atol=1e-3)
+
+    # pallas consumes concrete host-side schedules: no lanes, same numbers,
+    # and re-targeting pins the per-tile choices (never re-selects)
+    on_pallas = plan.with_backend("pallas")
+    assert on_pallas.backend == "pallas" and not on_pallas.scan_group_meta
+    assert on_pallas.tile_dataflows == plan.tile_dataflows
+    np.testing.assert_allclose(np.asarray(on_pallas.apply(a, b)), ref,
+                               rtol=1e-4, atol=1e-4)
+    back = plan.with_backend("reference")
+    assert back.tile_dataflows == plan.tile_dataflows
+    np.testing.assert_allclose(np.asarray(back.apply(a, b)), ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mixed_apply_does_zero_host_work(monkeypatch):
+    a, b = _hetero_case()
+    plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=FOUR)
+    assert isinstance(plan, TiledPlan)
+
+    def _forbidden(name):
+        def fn(*args, **kwargs):
+            raise AssertionError(f"{name} called during mixed apply")
+        return fn
+
+    for name in ("build_ip_plan", "build_op_plan", "build_gust_plan"):
+        monkeypatch.setattr(df, name, _forbidden(name))
+    monkeypatch.setattr(api.CompressionLayout, "from_bitmap",
+                        _forbidden("CompressionLayout.from_bitmap"))
+    before = dict(api.PHASE1_COUNTERS)
+    np.testing.assert_allclose(np.asarray(plan.apply(a, b)), a @ b,
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(jax.jit(plan.apply)(a, b)), a @ b,
+                               rtol=1e-3, atol=1e-3)
+    assert api.PHASE1_COUNTERS == before
+
+
+def test_mixed_pytree_roundtrip_and_matches():
+    a, b = _hetero_case()
+    plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=FOUR)
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    plan2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(plan2, TiledPlan)
+    assert plan2.tile_dataflows == plan.tile_dataflows
+    assert plan2.scan_group_meta == plan.scan_group_meta
+    np.testing.assert_allclose(np.asarray(plan2.apply(a, b)), a @ b,
+                               rtol=1e-3, atol=1e-3)
+    assert plan.matches(a * 2.0, b)
+    a_other, b_other = _hetero_case(seed=11)
+    assert not plan.matches(random_sparse_dense(
+        np.random.default_rng(5), a.shape, density=0.15,
+        block_shape=BS[:2]), b)
+
+
+def test_mixed_autotune_measures_per_tile():
+    from repro.backends.policies import AutotunePolicy
+
+    rng = np.random.default_rng(7)
+    a = np.zeros((32, 32), np.float32)
+    a[:16] = rng.standard_normal((16, 32))
+    a[16:] = random_sparse_dense(rng, (16, 32), density=0.3,
+                                 block_shape=BS[:2])
+    b = random_sparse_dense(rng, (32, 32), density=0.8, block_shape=BS[1:])
+    pol = AutotunePolicy(reps=1)
+    budget = MemoryBudget(l1_bytes=2100, l2_bytes=6000)
+    plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=budget, policy=pol)
+    assert isinstance(plan, TiledPlan)
+    assert pol.measurements == plan.n_tiles      # one sweep per tile
+    np.testing.assert_allclose(np.asarray(plan.apply(a, b)), a @ b,
+                               rtol=1e-3, atol=1e-3)
+    # repeat planning hits the per-tile measurement cache
+    flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                  memory_budget=budget, policy=pol)
+    assert pol.measurements == plan.n_tiles
+
+
+# ---------------------------------------------------------------------------
+# PlanCache + distribution
+# ---------------------------------------------------------------------------
+
+
+class _PinEachTile(SelectionPolicy):
+    """Per-tile pin with a deliberately unique cache_key (identity test)."""
+
+    name = "pin-each-tile"
+
+    def __init__(self, dataflow):
+        self.pinned = dataflow
+
+    @property
+    def cache_key(self):
+        return f"pin-each-tile:{id(self)}"
+
+    def select(self, ctx):
+        return self.pinned if self.pinned in ctx.allowed else ctx.allowed[0]
+
+
+def test_plan_cache_keys_mixed_by_tile_choices():
+    a, b = _hetero_case()
+    cache = PlanCache()
+    p1 = cache.get(a, b, dataflow="mixed", block_shape=BS,
+                   memory_budget=FOUR)
+    p2 = cache.get(a * 3.0, b, dataflow="mixed", block_shape=BS,
+                   memory_budget=FOUR)
+    assert p2 is p1 and cache.hits == 1
+    # two *distinct* policy objects that agree tile-by-tile share one plan:
+    # the mixed cache identity is the per-tile choices, not the policy
+    q1 = cache.get(a, b, dataflow="mixed", block_shape=BS,
+                   memory_budget=FOUR, policy=_PinEachTile("gust_m"))
+    q2 = cache.get(a, b, dataflow="mixed", block_shape=BS,
+                   memory_budget=FOUR, policy=_PinEachTile("gust_m"))
+    assert q2 is q1
+    # a policy with different per-tile choices builds a different plan
+    q3 = cache.get(a, b, dataflow="mixed", block_shape=BS,
+                   memory_budget=FOUR, policy=_PinEachTile("ip_m"))
+    assert q3 is not q1
+    assert q1.tile_dataflows != q3.tile_dataflows
+
+
+def test_mixed_sharded_serial_fallback(virtual_mesh):
+    a, b = _hetero_case(seed=9, m=64, k=64, n=64)
+    budget = MemoryBudget(l1_bytes=5000, l2_bytes=20000)
+    plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
+                         memory_budget=budget, mesh=virtual_mesh)
+    assert isinstance(plan, ShardedPlan)
+    assert plan.dataflow == "mixed" and plan.axis == "m"
+    assert plan.collective == "none" and plan.ici_bytes == 0.0
+    assert not plan.shard_ok                     # serial fallback, unchanged
+    out = np.asarray(plan.apply(a, b))
+    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-3)
+    out_jit = np.asarray(jax.jit(plan.apply)(a, b))
+    np.testing.assert_allclose(out_jit, a @ b, rtol=1e-3, atol=1e-3)
+    # shards may hold different mixes: collect per-shard tile dataflows
+    shard_hists = [getattr(p, "tile_histogram", {p.dataflow: 1})
+                   for p in plan.plans]
+    assert all(set(h) <= set(df.DATAFLOWS) for h in shard_hists)
+    # re-targeting pins every shard's choices
+    back = plan.with_backend("reference")
+    np.testing.assert_allclose(np.asarray(back.apply(a, b)), out,
+                               rtol=1e-4, atol=1e-4)

@@ -14,8 +14,12 @@ from repro.configs import get_config
 from repro.models import build_model
 
 TOL = 3e-2
+#: jamba is by far the heaviest smoke config (hybrid attn+mamba+moe stack);
+#: its parametrizations carry the ``slow`` marker so the CI smoke lane
+#: (``-m "not slow"``) skips them while the full lane keeps coverage
+_JAMBA = pytest.param("jamba-v0.1-52b", marks=pytest.mark.slow)
 ARCHS = ["smollm-360m", "qwen2-1.5b", "granite-34b", "llama3.2-3b",
-         "chameleon-34b", "rwkv6-3b", "jamba-v0.1-52b", "mixtral-8x7b",
+         "chameleon-34b", "rwkv6-3b", _JAMBA, "mixtral-8x7b",
          "granite-moe-1b-a400m"]
 
 
@@ -49,7 +53,7 @@ def test_decode_matches_forward(arch):
 
 
 @pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-3b",
-                                  "jamba-v0.1-52b", "mixtral-8x7b"])
+                                  _JAMBA, "mixtral-8x7b"])
 def test_prefill_then_decode(arch):
     cfg = _cfg(arch)
     model = build_model(cfg)
@@ -99,6 +103,7 @@ def test_encdec_decode_matches_forward():
     assert np.abs(dec - full).max() / scale < TOL
 
 
+@pytest.mark.slow
 def test_swa_ring_buffer_long_context():
     """SWA decode with a ring cache smaller than the context must match a
     full-cache reference restricted to the window."""

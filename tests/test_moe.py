@@ -38,6 +38,7 @@ def test_three_strategies_agree(setup):
             np.testing.assert_allclose(outs[a], outs[b], rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 48), st.integers(0, 2 ** 16))
 def test_einsum_group_size_invariance(group, seed):

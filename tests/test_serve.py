@@ -17,8 +17,9 @@ def model_and_params():
     return cfg, model, params
 
 
-def _reference_greedy(model, params, prompt, n_new, max_seq=64):
-    cache = model.init_cache(1, max_seq)
+def _reference_greedy(model, params, prompt, n_new, max_seq=64,
+                      dtype=jnp.bfloat16):
+    cache = model.init_cache(1, max_seq, dtype)
     logits, cache = model.prefill(params, jnp.asarray(prompt)[None], cache)
     toks = [int(jnp.argmax(logits[0, -1]))]
     for _ in range(n_new - 1):
@@ -38,6 +39,7 @@ def test_engine_matches_reference(model_and_params):
     assert out == _reference_greedy(model, params, prompt, 6)
 
 
+@pytest.mark.slow
 def test_continuous_batching_mixed_lengths(model_and_params):
     """More requests than slots, different prompt lengths and progress —
     every request must still match its isolated reference decode."""
@@ -123,3 +125,105 @@ def test_eos_frees_slot(model_and_params):
     eng.submit(Request(0, prompt, max_new_tokens=8, eos_id=eos))
     out = eng.run_to_completion()[0]
     assert out == ref[:3]       # stops right after emitting eos
+
+
+# ---------------------------------------------------------------------------
+# Cache-write regressions (engine.py prefill/step fixes)
+# ---------------------------------------------------------------------------
+
+
+class _InitCacheSpy:
+    """Delegating model wrapper that records every ``init_cache`` call."""
+
+    def __init__(self, model):
+        self._model = model
+        self.calls = []
+
+    def __getattr__(self, name):
+        return getattr(self._model, name)
+
+    def init_cache(self, batch, max_seq, dtype=jnp.bfloat16):
+        self.calls.append((batch, dtype))
+        return self._model.init_cache(batch, max_seq, dtype)
+
+
+def test_prefill_threads_engine_dtype(model_and_params):
+    """Every cache the engine builds — the slot cache AND the batch-1
+    prefill caches — must carry the engine dtype; prefill silently
+    allocating at the model default and casting at write time is the bug."""
+    cfg, model, params = model_and_params
+    spy = _InitCacheSpy(model)
+    eng = ServeEngine(spy, params, slots=2, max_seq=64, dtype=jnp.float32)
+    rng = np.random.default_rng(4)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab, size=5),
+                       max_new_tokens=3))
+    eng.run_to_completion()
+    assert len(spy.calls) >= 2           # slot cache + >= 1 prefill cache
+    assert all(dt == jnp.float32 for _, dt in spy.calls), spy.calls
+
+
+def test_mixed_dtype_serve_round_trip(model_and_params):
+    """A float32 engine must match the float32 reference decode exactly —
+    the whole prefill/decode path runs at the engine dtype."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, size=int(s)) for s in (5, 9)]
+    eng = ServeEngine(model, params, slots=2, max_seq=64, dtype=jnp.float32)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid, p, max_new_tokens=5))
+    results = eng.run_to_completion()
+    for rid, p in enumerate(prompts):
+        assert results[rid] == _reference_greedy(model, params, p, 5,
+                                                 dtype=jnp.float32), rid
+
+
+class _OddCacheLeafModel:
+    """Minimal decode surface whose cache hides a leaf with no detectable
+    batch dim (shape ``(2 * batch, 3)``) — a silent skip would decode
+    against a stale prefix with no error at all."""
+
+    vocab = 17
+
+    def init_cache(self, batch, max_seq, dtype=jnp.bfloat16):
+        return {"layers": {"k": jnp.zeros((batch, max_seq, 4), dtype),
+                           "odd": jnp.zeros((batch * 2, 3), dtype)},
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(self, params, tokens, cache):
+        b, s = tokens.shape
+        return jnp.ones((b, s, self.vocab)), cache
+
+    def decode_step(self, params, cache, tokens):
+        return (jnp.ones((tokens.shape[0], 1, self.vocab)),
+                {"layers": cache["layers"], "pos": cache["pos"] + 1})
+
+
+def test_unmatched_cache_leaf_fails_loud():
+    model = _OddCacheLeafModel()
+    eng = ServeEngine(model, {}, slots=3, max_seq=16)
+    with pytest.raises(ValueError, match="batch dim"):
+        eng.submit(Request(0, np.asarray([1, 2, 3]), max_new_tokens=2))
+
+
+def test_slot_reuse_parity(model_and_params):
+    """A free slot must not drift while other slots decode, and the same
+    request decoded in a reused slot must match a fresh engine exactly."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(8)
+    p0 = rng.integers(0, cfg.vocab, size=6)
+    p1 = rng.integers(0, cfg.vocab, size=9)
+
+    eng = ServeEngine(model, params, slots=2, max_seq=64)
+    eng.submit(Request(0, p0, max_new_tokens=6))
+    eng.run_to_completion()
+    # slot 1 sat free through 6 fused steps; its state must not have drifted
+    pos = np.asarray(eng.cache["pos"])
+    assert (pos == 0).all(), pos
+
+    # the reused slot replays the request identically to a fresh engine
+    eng.submit(Request(1, p1, max_new_tokens=6))
+    reused = eng.run_to_completion()[1]
+    fresh = ServeEngine(model, params, slots=2, max_seq=64)
+    fresh.submit(Request(1, p1, max_new_tokens=6))
+    assert reused == fresh.run_to_completion()[1]
+    assert reused == _reference_greedy(model, params, p1, 6)
