@@ -30,6 +30,10 @@ mesh.
 CLI (the CI smoke step)::
 
     python -m benchmarks.kernels_bench --quick --json BENCH_kernels.json
+
+``--verify`` additionally gates every (untimed) plan build behind
+``repro.analysis.verify_plan`` — the timed ``plan_build``/``per_call``
+lambdas stay unverified so latency rows remain comparable across runs.
 """
 from __future__ import annotations
 
@@ -68,7 +72,7 @@ def _time(fn, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(quick: bool = False) -> list[Row]:
+def run(quick: bool = False, verify: bool = False) -> list[Row]:
     rows = []
     rng = np.random.default_rng(7)
     cases = CASES[:1] if quick else CASES
@@ -101,7 +105,7 @@ def run(quick: bool = False) -> list[Row]:
             # per-dataflow correctness + latency through the registry
             for df in dataflows:
                 plan = flexagon_plan(a, b, dataflow=df, block_shape=BS,
-                                     backend=backend)
+                                     backend=backend, verify=verify or None)
                 us = _time(lambda p=plan: p.apply(a, b), reps=reps)
                 err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
                 t = memory[df]
@@ -125,7 +129,8 @@ def run(quick: bool = False) -> list[Row]:
             build_us = _time(
                 lambda be=backend: flexagon_plan(a, b, block_shape=BS,
                                                  backend=be), reps=reps)
-            plan = flexagon_plan(a, b, block_shape=BS, backend=backend)
+            plan = flexagon_plan(a, b, block_shape=BS, backend=backend,
+                                 verify=verify or None)
             apply_us = _time(lambda: plan.apply(a, b), reps=max(reps, 2))
             per_call_us = _time(
                 lambda be=backend: flexagon_plan(
@@ -159,8 +164,11 @@ def main() -> None:
                     help="1 case, 3 dataflows, 1 rep (CI smoke)")
     ap.add_argument("--json", metavar="PATH",
                     help="also write rows as JSON (CI artifact)")
+    ap.add_argument("--verify", action="store_true",
+                    help="gate every built plan behind "
+                         "repro.analysis.verify_plan (raises on error)")
     args = ap.parse_args()
-    rows = run(quick=args.quick)
+    rows = run(quick=args.quick, verify=args.verify)
     print("name,us_per_call,derived")
     for row in rows:
         print(row.csv())

@@ -24,7 +24,10 @@ Public operator surface (see DESIGN.md for the phase-1/phase-2 contract):
 
 Subpackages: ``core`` (formats/dataflows/selector/simulator), ``backends``,
 ``memory``, ``dist``, ``kernels`` (Pallas), ``models``, ``serve``,
-``train``, ``launch``.
+``train``, ``launch``, ``analysis`` (plan verifier / jaxpr purity report /
+AST lint — exposed lazily here as ``verify_plan``, ``verify_cache``,
+``trace_report``, ``RetraceDetector``, ``PlanDiagnostic``,
+``PlanVerificationError``; see DESIGN.md §15).
 """
 from .api import (  # noqa: F401
     FlexagonPipeline,
@@ -68,4 +71,35 @@ __all__ = [
     "DistPartition",
     "Partitioner",
     "ShardedPlan",
+    "verify_plan",
+    "verify_cache",
+    "trace_report",
+    "RetraceDetector",
+    "PlanDiagnostic",
+    "PlanVerificationError",
 ]
+
+#: analysis-layer names resolved lazily (PEP 562) so importing ``repro``
+#: never pays for the verifier / jaxpr tooling on the serving path
+_ANALYSIS_LAZY = {
+    "verify_plan",
+    "verify_cache",
+    "trace_report",
+    "RetraceDetector",
+    "PlanDiagnostic",
+    "PlanVerificationError",
+}
+
+
+def __getattr__(name):
+    if name in _ANALYSIS_LAZY:
+        from . import analysis
+
+        value = getattr(analysis, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _ANALYSIS_LAZY)

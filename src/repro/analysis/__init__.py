@@ -1,0 +1,51 @@
+"""Static-analysis layer: plan verifier, jaxpr purity/cost, AST lint.
+
+See DESIGN.md §15.  Attribute access is lazy (PEP 562) so the stdlib-only
+lint CLI (``python -m repro.analysis.lint``) never has to pay for — or
+depend on — a jax import through :mod:`repro.analysis.jaxpr`.
+"""
+from __future__ import annotations
+
+from .diagnostics import (ERROR, INFO, WARNING, PlanDiagnostic,
+                          PlanVerificationError, errors_of)
+
+__all__ = [
+    "ERROR",
+    "WARNING",
+    "INFO",
+    "PlanDiagnostic",
+    "PlanVerificationError",
+    "errors_of",
+    "verify_plan",
+    "verify_cache",
+    "trace_report",
+    "TraceReport",
+    "RetraceDetector",
+    "Observation",
+    "lint_paths",
+]
+
+_LAZY = {
+    "verify_plan": "verify",
+    "verify_cache": "verify",
+    "trace_report": "jaxpr",
+    "TraceReport": "jaxpr",
+    "RetraceDetector": "jaxpr",
+    "Observation": "jaxpr",
+    "lint_paths": "lint",
+}
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(f".{module}", __name__), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

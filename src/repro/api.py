@@ -60,6 +60,7 @@ from .backends import ExecutionBackend, get_backend
 from .backends.base import TABLE3_FORMATS as _TABLE3_FORMATS
 from .backends.base import allowed_dataflows
 from .backends.policies import SelectionContext, SelectionPolicy, get_policy
+from .config import resolve_verify
 from .core import dataflows as df
 from .core.formats import (
     CSC, CSR, BlockCSC, BlockCSR, SparseFormat, block_occupancy,
@@ -307,8 +308,8 @@ def _pattern_consistent(x: SparseOperand, layout: CompressionLayout) -> bool:
             or isinstance(x.indptr, jax.core.Tracer):
         return False
     planned = layout.cols if layout.fmt is SparseFormat.BCSR else layout.rows
-    return (np.array_equal(np.asarray(x.indptr), layout.indptr)
-            and np.array_equal(np.asarray(x.indices), planned))
+    return (np.array_equal(np.asarray(x.indptr), layout.indptr)  # lint: host-ok
+            and np.array_equal(np.asarray(x.indices), planned))  # lint: host-ok
 
 
 def _pattern_of(spec: OperandSpec, block_shape: Tuple[int, int]
@@ -501,7 +502,8 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                   memory_budget: Optional[Any] = None,
                   mesh: Optional[Any] = None,
                   partition: Optional[Any] = None,
-                  tile_dataflows: Optional[Tuple[str, ...]] = None
+                  tile_dataflows: Optional[Tuple[str, ...]] = None,
+                  verify: Optional[bool] = None
                   ) -> FlexagonPlan:
     """Phase 1, exactly once: inspect patterns, select, lay out, configure.
 
@@ -542,6 +544,14 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     ``partition`` (a :class:`repro.dist.DistPartition`) overrides the
     strategy's axis or shard count; tiling under ``memory_budget`` then
     happens *within* each shard.
+
+    ``verify`` gates the returned plan behind
+    :func:`repro.analysis.verify_plan` — structural invariants (coverage,
+    merge compatibility, pad validity, backend capability, fingerprint
+    agreement) are re-derived from the built plan and an error-severity
+    violation raises :class:`repro.analysis.PlanVerificationError` instead
+    of handing out a corrupt plan.  ``None`` defers to ``REPRO_VERIFY``
+    (on in the test suite, off otherwise).
     """
     bm, bk, bn = block_shape
     (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
@@ -591,7 +601,7 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                                fingerprint=fingerprint, spec=spec,
                                policy=policy_obj)
         if sharded is not None:
-            return sharded
+            return _maybe_verify(sharded, verify)
 
     if memory_budget is not None:
         from .memory.tiled_plan import plan_tiled   # lazy: memory uses api
@@ -603,7 +613,7 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                            spec=spec, policy=policy_obj,
                            tile_dataflows=tile_dataflows if mixed else None)
         if tiled is not None:
-            return tiled
+            return _maybe_verify(tiled, verify)
 
     if mixed:
         # the whole pattern fits in one resident tile — nothing to mix;
@@ -640,6 +650,19 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     )
     # "configure the hardware": backend-specific pattern-only schedules
     plan.aux = backend_obj.prepare(plan)
+    return _maybe_verify(plan, verify)
+
+
+def _maybe_verify(plan, verify: Optional[bool]):
+    """The pre-execution gate: verify freshly built plans when asked.
+
+    Runs only at build time — cache *hits* hand back plans that already
+    passed (re-verifying per hit would put host work on the serving path).
+    """
+    if resolve_verify(verify):
+        from .analysis.verify import verify_plan   # lazy: analysis uses api
+
+        verify_plan(plan, raise_on_error=True)
     return plan
 
 
@@ -701,7 +724,12 @@ class PlanCache:
             interpret: Optional[bool] = None,
             memory_budget: Optional[Any] = None,
             mesh: Optional[Any] = None,
-            partition: Optional[Any] = None) -> FlexagonPlan:
+            partition: Optional[Any] = None,
+            verify: Optional[bool] = None) -> FlexagonPlan:
+        # ``verify`` gates plan *builds* only (misses); hits return plans
+        # that already passed, keeping verification off the serving path.
+        # It is deliberately not part of the cache key — a verified and an
+        # unverified build of the same pattern are the same plan.
         from .dist.partition import mesh_key   # lazy: dist uses api
 
         bm, bk, bn = block_shape
@@ -751,7 +779,7 @@ class PlanCache:
                                  interpret=interpret,
                                  memory_budget=memory_budget,
                                  mesh=mesh, partition=partition,
-                                 tile_dataflows=choices)
+                                 tile_dataflows=choices, verify=verify)
             self._plans[key] = plan
             self.builds += 1
             if self.maxsize is not None and len(self._plans) > self.maxsize:

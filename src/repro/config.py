@@ -9,6 +9,14 @@ mode (CPU-safe validation, the development default); set ``REPRO_INTERPRET=0``
 on a real TPU to compile natively.  An explicit ``interpret=`` argument at any
 call site still wins.
 
+``REPRO_VERIFY`` — pre-execution plan verification default (see
+``repro.analysis.verify_plan``).  Unset or falsy, plans are handed out
+unchecked (production default: verification re-derives every invariant on
+the host, which is wasted work on a trusted path); set ``REPRO_VERIFY=1``
+to gate every ``flexagon_plan``/``PlanCache`` build behind the verifier —
+the test suite turns this on in ``tests/conftest.py``.  An explicit
+``verify=`` argument at any call site still wins.
+
 ``virtual_devices`` — the one place that sets
 ``--xla_force_host_platform_device_count`` (virtual CPU devices for mesh /
 ``shard_map`` work without TPUs).  Launchers (``launch.dryrun`` /
@@ -19,7 +27,8 @@ from __future__ import annotations
 
 import os
 
-__all__ = ["interpret_default", "resolve_interpret", "virtual_devices"]
+__all__ = ["interpret_default", "resolve_interpret", "verify_default",
+           "resolve_verify", "virtual_devices"]
 
 _DEVICE_FLAG = "--xla_force_host_platform_device_count"
 
@@ -65,3 +74,18 @@ def interpret_default() -> bool:
 def resolve_interpret(explicit: bool | None = None) -> bool:
     """An explicit per-call value wins; ``None`` defers to the global knob."""
     return interpret_default() if explicit is None else bool(explicit)
+
+
+def verify_default() -> bool:
+    """Global plan-verification default (``REPRO_VERIFY``).
+
+    Read at call time, not import time, like :func:`interpret_default`.
+    Off unless explicitly enabled — verification is a debugging/CI gate,
+    not a production tax.
+    """
+    return os.environ.get("REPRO_VERIFY", "").strip().lower() in _TRUE
+
+
+def resolve_verify(explicit: bool | None = None) -> bool:
+    """An explicit per-call value wins; ``None`` defers to the global knob."""
+    return verify_default() if explicit is None else bool(explicit)

@@ -238,7 +238,7 @@ def _dense_grid_shape(a_grid, b_grid, block_a, block_b):
 def ip_m(a: BlockCSR, b: BlockCSC, plan: IPPlan | None = None) -> jax.Array:
     """Inner Product, M-stationary (MNK).  No partial sums leave the C block."""
     if plan is None:
-        plan = build_ip_plan(a, b)
+        plan = build_ip_plan(a, b)  # lint: host-ok (concrete-only fallback)
     if a.nnzb == 0 or b.nnzb == 0:
         return jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
     mb, nb, bm, bn = _dense_grid_shape(a.grid, b.grid, a.block_shape, b.block_shape)
@@ -280,7 +280,7 @@ def _stream_execute(a_data, b_data, plan: StreamPlan, out_grid, blocks, m, n):
 def op_m(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None) -> jax.Array:
     """Outer Product, M-stationary (KMN).  Every k streams a rank-1 update."""
     if plan is None:
-        plan = build_op_plan(a, b)
+        plan = build_op_plan(a, b)  # lint: host-ok (concrete-only fallback)
     mb = a.grid[0]
     nb = b.grid[1]
     return _stream_execute(a.data, b.data, plan, (mb, nb),
@@ -291,7 +291,7 @@ def op_m(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None) -> jax.Array:
 def gust_m(a: BlockCSR, b: BlockCSR, plan: StreamPlan | None = None) -> jax.Array:
     """Gustavson, M-stationary (MKN).  Leader-follower row gather."""
     if plan is None:
-        plan = build_gust_plan(a, b)
+        plan = build_gust_plan(a, b)  # lint: host-ok (concrete-only fallback)
     mb = a.grid[0]
     nb = b.grid[1]
     return _stream_execute(a.data, b.data, plan, (mb, nb),

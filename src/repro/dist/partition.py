@@ -93,7 +93,7 @@ def mesh_device_count(mesh) -> int:
     shard count clamp with ``max(1, ...)``)."""
     if mesh is None:
         return 0
-    return int(np.asarray(mesh.devices).size)
+    return int(np.asarray(mesh.devices).size)  # lint: host-ok (host metadata)
 
 
 def resolve_shards(mesh, partition: Optional[DistPartition]) -> int:

@@ -265,7 +265,8 @@ class ShardedPlan:
 
     def _flat_mesh(self):
         """The mesh's devices as a 1-D ("shards",) mesh (first n_shards)."""
-        devs = np.asarray(self.mesh.devices).reshape(-1)[: self.n_shards]
+        # device objects are host metadata, never traced
+        devs = np.asarray(self.mesh.devices).reshape(-1)[: self.n_shards]  # lint: host-ok
         return jax.sharding.Mesh(devs, ("shards",))
 
     def _apply_shard_map(self, a_d: jax.Array, b_d: jax.Array) -> jax.Array:

@@ -56,7 +56,7 @@ def ip_spmm(a: BlockCSR, b: BlockCSC, plan: IPPlan | None = None, *,
     """
     interpret = resolve_interpret(interpret)
     if plan is None:
-        plan = build_ip_plan(a, b)
+        plan = build_ip_plan(a, b)  # lint: host-ok (concrete-only fallback)
     mb, kb = a.grid
     kb2, nb = b.grid
     assert kb == kb2

@@ -65,7 +65,8 @@ class CompressedFFN:
                  spec: TPUSpec = TPUSpec(), backend=None, policy=None,
                  memory_budget=None, mesh=None, partition=None,
                  plan_cache: Optional[PlanCache] = None,
-                 max_shapes: Optional[int] = None):
+                 max_shapes: Optional[int] = None,
+                 verify: Optional[bool] = None):
         self._dense = (w_gate, w_up, w_down)    # masked dense, phase-1 only
         self.block = block
         self.spec = spec
@@ -74,6 +75,7 @@ class CompressedFFN:
         self.memory_budget = memory_budget      # repro.memory.MemoryBudget
         self.mesh = mesh                        # jax device mesh (repro.dist)
         self.partition = partition              # repro.dist.DistPartition
+        self.verify = verify                    # plan-build verification gate
         self.tokens = tokens
         self.plan_cache = plan_cache if plan_cache is not None \
             else PlanCache(spec, maxsize=None if max_shapes is None
@@ -121,13 +123,15 @@ class CompressedFFN:
                                       policy=self.policy,
                                       memory_budget=self.memory_budget,
                                       mesh=self.mesh,
-                                      partition=self.partition)
+                                      partition=self.partition,
+                                      verify=self.verify)
         plan_out = self.plan_cache.get((tokens, f), wd, block_shape=bs,
                                        backend=self.backend,
                                        policy=self.policy,
                                        memory_budget=self.memory_budget,
                                        mesh=self.mesh,
-                                       partition=self.partition)
+                                       partition=self.partition,
+                                       verify=self.verify)
         entry = PlannedFFN(plan_in, plan_out,
                            self._pack("gate", wg, plan_in),
                            self._pack("up", wu, plan_in),
@@ -174,7 +178,8 @@ def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
                  backend=None, policy=None, memory_budget=None,
                  mesh=None, partition=None,
                  plan_cache: Optional[PlanCache] = None,
-                 max_shapes: Optional[int] = None) -> CompressedFFN:
+                 max_shapes: Optional[int] = None,
+                 verify: Optional[bool] = None) -> CompressedFFN:
     """Phase 1 for one pruned FFN layer: occupancy → dataflow → plans.
 
     ``backend``/``policy`` parameterize the plan API's execution substrate
@@ -183,7 +188,8 @@ def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
     ``mesh``/``partition`` shard every plan across a device mesh (see
     :mod:`repro.dist` — the fused-decode matmuls then run as one
     ``shard_map``); ``plan_cache``/``max_shapes`` bound the serving-loop
-    plan caches.
+    plan caches; ``verify`` gates every plan build behind
+    ``repro.analysis.verify_plan`` (``None`` defers to ``REPRO_VERIFY``).
     """
     assert "block_mask" in ffn_params, "FFN is not block-pruned"
     wg = np.asarray(_masked_weight(ffn_params["w_gate"]["w"],
@@ -196,7 +202,7 @@ def compress_ffn(ffn_params: Dict[str, Any], *, tokens: int,
                          backend=backend, policy=policy,
                          memory_budget=memory_budget, mesh=mesh,
                          partition=partition, plan_cache=plan_cache,
-                         max_shapes=max_shapes)
+                         max_shapes=max_shapes, verify=verify)
 
 
 def sparse_ffn_apply(comp: CompressedFFN, x: jax.Array) -> jax.Array:

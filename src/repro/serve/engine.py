@@ -71,8 +71,14 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
-                 dtype=jnp.bfloat16, sparse_ffn=None, moe_policy=None):
+                 dtype=jnp.bfloat16, sparse_ffn=None, moe_policy=None,
+                 verify: Optional[bool] = None):
+        # ``verify`` gates every plan the engine builds (construction-time
+        # decode plans and admission-time prefill plans) behind
+        # ``repro.analysis.verify_plan``; None defers to REPRO_VERIFY
         self.model = model
+        if sparse_ffn is not None and verify is not None:
+            sparse_ffn.verify = verify
         self.params = params
         self.slots = slots
         self.max_seq = max_seq

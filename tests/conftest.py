@@ -19,6 +19,13 @@ import types
 
 import pytest
 
+# Every plan the suite builds goes through the analysis verifier
+# (repro.analysis.verify_plan raises on any error-severity diagnostic).
+# Read at call time by repro.config.verify_default, so setdefault here —
+# before any planning — covers the whole session; an explicit REPRO_VERIFY
+# in the environment still wins.
+os.environ.setdefault("REPRO_VERIFY", "1")
+
 try:
     from repro.config import virtual_devices
     virtual_devices(8)

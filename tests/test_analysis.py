@@ -1,0 +1,385 @@
+"""repro.analysis — plan verifier, jaxpr purity/retrace report, AST lint.
+
+Mutation style: build a legitimate plan through ``flexagon_plan``, corrupt
+exactly one invariant with ``dataclasses.replace``, and assert the verifier
+reports the *expected diagnostic code* (not just "some error").  Clean
+plans across every dataflow family must produce zero diagnostics — the
+whole suite already runs with ``REPRO_VERIFY=1`` (tests/conftest.py), so a
+verifier false-positive would fail far more than this file.
+"""
+import dataclasses
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import MemoryBudget, PlanCache, flexagon_plan
+from repro.analysis import (ERROR, PlanDiagnostic, PlanVerificationError,
+                            RetraceDetector, errors_of, lint_paths,
+                            trace_report, verify_cache, verify_plan)
+from repro.core import random_sparse_dense
+from repro.core.dataflows import DATAFLOWS
+
+BS = (16, 16, 16)
+TILING = MemoryBudget(l1_bytes=4096, l2_bytes=16384)
+
+
+def _operands(m=64, k=64, n=64, da=0.4, db=0.4, seed=0):
+    rng = np.random.default_rng(seed)
+    a = random_sparse_dense(rng, (m, k), density=da, block_shape=BS[:2])
+    b = random_sparse_dense(rng, (k, n), density=db, block_shape=BS[1:])
+    return a, b
+
+
+def _codes(diags):
+    return [d.code for d in diags]
+
+
+# ---------------------------------------------------------------------------
+# clean plans: zero diagnostics across every family
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dataflow", DATAFLOWS)
+def test_clean_untiled_plan_verifies(dataflow):
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS)
+    assert verify_plan(plan) == []
+
+
+@pytest.mark.parametrize("dataflow", DATAFLOWS + ("mixed",))
+def test_clean_tiled_plan_verifies(dataflow):
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS,
+                         memory_budget=TILING)
+    assert verify_plan(plan) == []
+
+
+@pytest.mark.parametrize("dataflow", ("ip_m", "op_m", "gust_m"))
+def test_clean_sharded_plan_verifies(dataflow, virtual_mesh):
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS,
+                         mesh=virtual_mesh)
+    assert not errors_of(verify_plan(plan))
+
+
+def test_clean_moe_plan_verifies():
+    from repro.configs import get_config
+    from repro.models.moe import plan_moe
+
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    assert verify_plan(plan_moe(cfg, 4)) == []
+
+
+def test_unknown_plan_type():
+    diags = verify_plan(object())
+    assert _codes(diags) == ["unknown-plan-type"]
+
+
+# ---------------------------------------------------------------------------
+# mutations: each corrupted invariant is caught with its exact code
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_fingerprint_mismatch():
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS)
+    bad = dataclasses.replace(plan, fingerprint="0" * 16)
+    assert "fingerprint-mismatch" in _codes(verify_plan(bad))
+    with pytest.raises(PlanVerificationError) as exc:
+        verify_plan(bad, raise_on_error=True)
+    assert exc.value.diagnostics[0].is_error
+
+
+def test_mutation_wrong_format_layout():
+    """A layout carrying the wrong Table 3 format (here: B's BCSC where A's
+    BCSR belongs) must be flagged, not silently mis-gathered."""
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS)
+    bad = dataclasses.replace(plan, a_layout=plan.b_layout)
+    assert "format-mismatch" in _codes(verify_plan(bad))
+
+
+def test_mutation_wrong_format_subplan():
+    """Same corruption one level down, inside a TiledPlan's tile."""
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="gust_m", block_shape=BS,
+                         memory_budget=TILING)
+    sub = plan.plans[0]
+    # gust wants (BCSR, BCSR); splice in an ip-planned BCSC B layout
+    donor = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS)
+    bad_sub = dataclasses.replace(sub, b_layout=donor.b_layout)
+    bad = dataclasses.replace(
+        plan, plans=(bad_sub,) + tuple(plan.plans[1:]))
+    diags = verify_plan(bad)
+    assert "format-mismatch" in _codes(diags)
+    assert any(d.location.startswith("plan.plans[0]") for d in diags)
+
+
+def test_mutation_pad_entry_in_bounds():
+    """A padded stream entry that scatters inside the local grid would
+    silently accumulate into C — the exact bug class the scan-lane padding
+    contract exists to rule out."""
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="gust_m", block_shape=BS)
+    sp = plan.index_plan
+    pad = lambda arr, v: np.append(np.asarray(arr), np.int32(v))
+    bad_sp = dataclasses.replace(
+        sp, ci=pad(sp.ci, 0), cj=pad(sp.cj, 0),
+        a_slot=pad(sp.a_slot, 0), b_slot=pad(sp.b_slot, 0))
+    bad = dataclasses.replace(plan, index_plan=bad_sp)
+    diags = verify_plan(bad)
+    assert "pad-inbounds" in _codes(diags)
+    # the same pad entry pushed OUT of the grid is legal padding
+    rows_g = -(-a.shape[0] // BS[0])
+    ok_sp = dataclasses.replace(bad_sp, ci=pad(sp.ci, rows_g))
+    ok = dataclasses.replace(plan, index_plan=ok_sp)
+    assert "pad-inbounds" not in _codes(verify_plan(ok))
+
+
+def test_mutation_overlapping_tiles():
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS,
+                         memory_budget=TILING)
+    assert len(plan.tiles) >= 2, "budget must force tiling for this test"
+    # duplicate tile 0 over tile 1's slot: cells double-covered AND dropped
+    bad = dataclasses.replace(
+        plan, tiles=(plan.tiles[0], plan.tiles[0]) + plan.tiles[2:])
+    codes = _codes(verify_plan(bad))
+    assert "tile-overlap" in codes
+    assert "tile-gap" in codes
+
+
+def test_mutation_scan_plan_on_non_streaming_backend():
+    """A plan whose structure needs lax.scan k-slab streaming cannot be
+    pointed at a backend that does not declare scan_streaming."""
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="op_m", block_shape=BS,
+                         memory_budget=TILING, backend="reference")
+    assert plan.scan_ok, "op_m under this budget should take the scan path"
+    bad = dataclasses.replace(plan, backend="pallas")
+    assert "backend-capability" in _codes(verify_plan(bad))
+    # the supported route is with_backend, which rebuilds the plan shape
+    assert not errors_of(verify_plan(plan.with_backend("pallas")))
+
+
+def test_mutation_unknown_backend():
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS)
+    bad = dataclasses.replace(plan, backend="no-such-substrate")
+    assert "backend-unknown" in _codes(verify_plan(bad))
+
+
+def test_mutation_moe_plan():
+    from repro.models.moe import MoEPlan
+
+    assert "moe-strategy-invalid" in _codes(
+        verify_plan(MoEPlan(strategy="auto", tokens=4)))
+    assert "moe-tokens-invalid" in _codes(
+        verify_plan(MoEPlan(strategy="einsum", tokens=0)))
+
+
+def test_verify_gate_in_flexagon_plan():
+    """The threaded ``verify=`` kwarg raises at build time on corruption.
+
+    Corruption cannot be injected through the public builder, so this
+    asserts the two reachable behaviours: clean builds pass the gate, and
+    the gate is the same raise path ``verify_plan(raise_on_error=True)``
+    takes (exercised above)."""
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="gust_m", block_shape=BS,
+                         verify=True)
+    assert plan.dataflow == "gust_m"
+    cache = PlanCache()
+    cache.get(a, b, block_shape=BS, verify=True)
+    assert cache.stats["misses"] == 1
+
+
+def test_verify_cache_key_mismatch():
+    a, b = _operands()
+    cache = PlanCache()
+    plan = cache.get(a, b, block_shape=BS)
+    assert verify_cache(cache) == []
+    key = next(iter(cache._plans))
+    cache._plans[key] = dataclasses.replace(plan, fingerprint="f" * 16)
+    codes = _codes(verify_cache(cache))
+    assert "cache-key-mismatch" in codes
+    assert "fingerprint-mismatch" in codes  # nested verify_plan, relocated
+
+
+# ---------------------------------------------------------------------------
+# jaxpr analysis: purity, cost cross-check, retrace detection
+# ---------------------------------------------------------------------------
+
+
+def test_trace_report_pure_and_deterministic():
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="gust_m", block_shape=BS)
+    rep1 = trace_report(plan)
+    rep2 = trace_report(plan)
+    assert rep1.pure and rep1.callbacks == ()
+    assert rep1.flops > 0
+    assert rep1.aval_hash == rep2.aval_hash
+    assert not any(d.severity == ERROR for d in rep1.diagnostics)
+
+
+@pytest.mark.parametrize("dataflow", ("ip_m", "op_m"))
+def test_trace_report_all_backends_pure(dataflow):
+    a, b = _operands()
+    for backend in ("reference", "pallas"):
+        plan = flexagon_plan(a, b, dataflow=dataflow, block_shape=BS,
+                             backend=backend)
+        assert trace_report(plan).pure, (dataflow, backend)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(dataflow="gust_m", memory_budget=TILING),       # TiledPlan
+    dict(dataflow="mixed", memory_budget=TILING),        # mixed TiledPlan
+], ids=["tiled", "mixed"])
+def test_trace_report_composed_plans_pure(kw):
+    a, b = _operands()
+    plan = flexagon_plan(a, b, block_shape=BS, **kw)
+    rep = trace_report(plan)
+    assert rep.pure and rep.callbacks == ()
+    assert rep.aval_hash == trace_report(plan).aval_hash
+
+
+def test_trace_report_sharded_plan_pure(virtual_mesh):
+    a, b = _operands()
+    plan = flexagon_plan(a, b, dataflow="op_m", block_shape=BS,
+                         mesh=virtual_mesh)
+    rep = trace_report(plan)
+    assert rep.pure and rep.callbacks == ()
+    assert rep.aval_hash == trace_report(plan).aval_hash
+
+
+def test_retrace_detector_stable_across_cache_hits():
+    a, b = _operands()
+    cache = PlanCache()
+    det = RetraceDetector()
+    for _ in range(3):
+        det.observe(cache.get(a, b, block_shape=BS))
+    assert det.stable and det.retraces == []
+    assert cache.stats["hits"] == 2
+
+
+# ---------------------------------------------------------------------------
+# regression: ServeEngine decode steps never retrace the cached plan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_serve_decode_steps_share_one_traced_plan():
+    """Two decode steps against the same PlanCache entry must present the
+    identical traced program — same jaxpr aval hash, zero new plan builds."""
+    from repro.configs import get_config
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+    from repro.models.ffn import ffn_init
+    from repro.models.sparse_linear import compress_ffn
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config("smollm-360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fcfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, d_ff=96, vocab=64, ffn_block_sparsity=0.4)
+    fparams = ffn_init(jax.random.PRNGKey(0), fcfg)
+    fparams["block_mask"] = (jax.random.uniform(
+        jax.random.PRNGKey(9), (4, 6)) > 0.4).astype(jnp.float32)
+    comp = compress_ffn(fparams, tokens=2, block=16, verify=True)
+
+    eng = ServeEngine(model, params, slots=2, max_seq=64, sparse_ffn=comp,
+                      verify=True)
+    det = RetraceDetector()
+    det.observe(comp.specialize(2).plan_in)      # cache hit, pre-decode
+    builds = comp.plan_builds
+    prompt = np.random.default_rng(3).integers(0, cfg.vocab, size=5)
+    eng.submit(Request(0, prompt, max_new_tokens=3))
+    eng.run_to_completion()
+    assert eng.stats["decode_steps"] >= 2
+    det.observe(comp.specialize(2).plan_in)      # same entry, post-decode
+    assert det.stable and det.retraces == []
+    # admission planned the one new prompt shape; decode added nothing more
+    assert comp.plan_builds == builds + 1
+    assert verify_cache(comp.plan_cache) == []
+
+
+# ---------------------------------------------------------------------------
+# AST lint
+# ---------------------------------------------------------------------------
+
+_BAD_MODULE = '''
+import numpy as np
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+import dataclasses
+
+
+def _helper(x):
+    return np.asarray(x).sum()
+
+
+def apply(x):
+    if jnp.any(x > 0):
+        x = x + 1
+    return _helper(x)
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def execute(x):
+    return pl.pallas_call(kernel, out_shape=x)(x)
+
+
+@dataclasses.dataclass
+class CustomPlan:
+    dataflow: str
+'''
+
+
+def test_lint_catches_all_rule_violations(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(_BAD_MODULE)
+    codes = _codes(lint_paths([str(bad)]))
+    assert "host-np" in codes
+    assert "traced-branch" in codes
+    assert "pallas-call" in codes
+    assert "plan-pytree" in codes
+
+
+def test_lint_pragma_suppresses_and_cuts_edge(tmp_path):
+    mod = tmp_path / "ok.py"
+    mod.write_text(
+        "import numpy as np\n\n\n"
+        "def _host_fallback(x):\n"
+        "    return np.asarray(x)\n\n\n"
+        "def apply(x):\n"
+        "    return _host_fallback(x)  # lint: host-ok (concrete fast path)\n"
+    )
+    assert lint_paths([str(mod)]) == []
+
+
+def test_lint_clean_on_shipped_tree():
+    """The shipped src/ tree must lint clean — same gate as CI."""
+    root = Path(__file__).resolve().parents[1]
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(root / "src")],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_diagnostic_shapes():
+    d = PlanDiagnostic(code="x", severity=ERROR, message="m", location="l",
+                       hint="h")
+    assert d.is_error and "x" in str(d) and "l" in str(d)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        d.code = "y"
