@@ -45,9 +45,11 @@ from collections import Counter
 import numpy as np
 
 from repro import PAPER_BUDGET, flexagon_plan, get_policy
+from repro.backends import SelectionContext, allowed_dataflows, get_backend
 from repro.core import random_sparse_dense
 from repro.core.formats import block_occupancy
 from repro.core.dataflows import DATAFLOWS
+from repro.core.selector import LayerShape, TPUSpec
 from repro.memory import mixed_tile_choices, sharded_traffic, tiled_traffic
 from .common import Row
 
@@ -149,12 +151,29 @@ def run(quick: bool = False, verify: bool = False) -> list[Row]:
                 f"{name}/{backend}: steady-state apply ({apply_us:.0f}us) "
                 f"slower than per-call plan+apply ({per_call_us:.0f}us)")
 
-        # selection policies, through the same seam the plans use
-        for pname in ("heuristic", "simulator"):
+        # selection policies, through the same seam the plans use; each row
+        # carries which policy selected and how long its select() takes
+        # ("learned" runs model-less here — heuristic fallback — unless
+        # REPRO_TUNE_MODEL names a fitted artifact; DESIGN.md §16)
+        shape = LayerShape(m, k, n, float(occ_a.mean()), float(occ_b.mean()),
+                           block=BS)
+        ctx = SelectionContext(
+            shape=shape, block_shape=BS, occ_a=occ_a, occ_b=occ_b,
+            fingerprint=f"bench:{name}", backend=get_backend("reference"),
+            spec=TPUSpec(), allowed=allowed_dataflows(
+                get_backend("reference"), BS))
+        for pname in ("heuristic", "simulator", "learned"):
             pol = get_policy(pname)
+            t0 = time.perf_counter()
+            choice = pol.select(ctx)
+            sel_s = time.perf_counter() - t0
             plan = flexagon_plan(a, b, block_shape=BS, policy=pol)
-            rows.append(Row(f"kernels/{name}/policy_{pname}", 0.0,
-                            f"choice={plan.dataflow}"))
+            assert plan.dataflow == choice, (name, pname)
+            rows.append(Row(f"kernels/{name}/policy_{pname}",
+                            sel_s * 1e6,
+                            f"choice={plan.dataflow}",
+                            extra={"policy": pname,
+                                   "selection_latency_s": sel_s}))
     return rows
 
 

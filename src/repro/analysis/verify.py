@@ -39,7 +39,7 @@ import numpy as np
 
 from ..api import PHASE1_COUNTERS, FlexagonPlan, _fingerprint
 from ..backends import get_backend
-from ..backends.base import TABLE3_FORMATS
+from ..backends.base import TABLE3_FORMATS, allowed_dataflows
 from ..core import dataflows as df
 from ..memory.tiled_plan import TiledPlan
 from ..memory.tiling import Tile, TileMergePlan
@@ -254,11 +254,17 @@ def _verify_flexagon(plan: FlexagonPlan, diags, loc, *,
               f"{loc}.index_plan")
 
     be = _check_backend(plan, diags, loc)
-    if be is not None and not be.supports(plan.dataflow, fmt_a, fmt_b,
-                                          tuple(plan.block_shape)):
-        _diag(diags, "backend-unsupported", ERROR,
-              f"backend {be.name!r} does not support {plan.dataflow!r} at "
-              f"block_shape={tuple(plan.block_shape)}", loc)
+    if be is not None:
+        # the same capability negotiation the policy path uses: the plan's
+        # dataflow must be in allowed_dataflows(backend, block_shape), so a
+        # learned/autotuned selection can never commit to a dataflow the
+        # backend would refuse at execution time
+        allowed = allowed_dataflows(be, tuple(plan.block_shape))
+        if plan.dataflow not in allowed:
+            _diag(diags, "backend-unsupported", ERROR,
+                  f"backend {be.name!r} does not admit {plan.dataflow!r} at "
+                  f"block_shape={tuple(plan.block_shape)} "
+                  f"(allowed: {allowed})", loc)
 
     if toplevel:
         # cache-key ↔ plan-content agreement: the fingerprint the PlanCache

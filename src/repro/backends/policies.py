@@ -9,8 +9,12 @@ swapping — heuristic vs. learned vs. measured.  This module is that seam:
 - :class:`SimulatorPolicy` — pick by simulated cycles on the cycle-level
   accelerator models — the paper's phase 1 proper;
 - :class:`AutotunePolicy`  — measure every candidate dataflow on-device at
-  plan time and pick the fastest, cached by pattern fingerprint (plan once,
-  measure once, reuse forever);
+  plan time and pick the fastest, LRU-cached by pattern fingerprint and
+  optionally persisted to a fleet-shared :class:`repro.tune.TuneDB` (plan
+  once, measure once — anywhere — reuse forever);
+- :class:`repro.tune.LearnedPolicy` (``policy="learned"``) — predict the
+  choice in microseconds from cheap pattern features, falling back to the
+  heuristic below a confidence threshold (DESIGN.md §16);
 - :class:`FixedPolicy`     — always the given dataflow (what an explicit
   ``dataflow="ip_m"`` argument resolves to).
 
@@ -25,7 +29,9 @@ from __future__ import annotations
 import abc
 import dataclasses
 import hashlib
+import os
 import time
+from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
@@ -99,6 +105,16 @@ class SelectionPolicy(abc.ABC):
     def cache_key(self) -> str:
         return self.name
 
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Telemetry counters (surfaced as ``ServeEngine.stats["policy"]``).
+
+        Stateful policies extend with their own counters: autotune's
+        hit/miss/measurement counts, the learned policy's
+        selection/fallback counts.
+        """
+        return {"name": self.name}
+
     @abc.abstractmethod
     def select(self, ctx: SelectionContext) -> str:
         """Pick one dataflow from ``ctx.allowed``."""
@@ -133,11 +149,18 @@ class SelectionPolicy(abc.ABC):
     # -- conveniences ----------------------------------------------------
     def select_for_shape(self, shape: LayerShape, *,
                          backend: Union[str, ExecutionBackend] = "reference",
-                         spec: TPUSpec = TPUSpec()) -> str:
+                         spec: TPUSpec = TPUSpec(),
+                         dtype: Any = "float32") -> str:
         """Select for shape features alone (dense-pattern context).
 
         For callers that have no concrete pattern — e.g. MoE dispatch
         planning, where the routing pattern only exists at run time.
+
+        The fingerprint carries the block shape and value dtype alongside
+        ``m×k×n`` + densities: shape-only selections are cached (and, with
+        a persistent :class:`repro.tune.TuneDB`, shared across the fleet)
+        by this string, and the same logical shape at two block configs or
+        element widths measures differently — the keys must not collide.
         """
         be = get_backend(backend)
         bm, bk, bn = shape.block
@@ -148,7 +171,8 @@ class SelectionPolicy(abc.ABC):
             shape=shape, block_shape=tuple(shape.block), occ_a=occ_a,
             occ_b=occ_b,
             fingerprint=f"shape:{shape.m}x{shape.k}x{shape.n}"
-                        f":{shape.density_a:.4f}:{shape.density_b:.4f}",
+                        f":{shape.density_a:.4f}:{shape.density_b:.4f}"
+                        f":b{bm}x{bk}x{bn}:{np.dtype(dtype).name}",
             backend=be, spec=spec, allowed=allowed)
         return self.select(ctx)
 
@@ -207,7 +231,13 @@ class SimulatorPolicy(SelectionPolicy):
 
         return getattr(self._oracle(), "cfg", PAPER_CONFIG)
 
-    def select(self, ctx: SelectionContext) -> str:
+    def price(self, ctx: SelectionContext) -> Dict[str, float]:
+        """Simulated time per allowed dataflow — ``select`` is its argmin.
+
+        Exposed so callers that need the full cost vector (margin-aware
+        corpus labeling in :mod:`repro.tune.corpus`, diagnostics) don't
+        re-price candidates one ``layer_cost`` call at a time.
+        """
         sim = self._oracle()
         shards = ctx.n_shards
         if shards > 1:
@@ -215,19 +245,22 @@ class SimulatorPolicy(SelectionPolicy):
 
             cfg = self._cfg()
             axis = getattr(ctx.partition, "axis", None)
-            return min(ctx.allowed, key=lambda d: (
-                sharded_traffic(d, ctx.occ_a, ctx.occ_b, ctx.block_shape,
-                                shards, budget=ctx.memory_budget, cfg=cfg,
-                                axis=axis).time_s(cfg), d))
+            return {d: sharded_traffic(
+                d, ctx.occ_a, ctx.occ_b, ctx.block_shape, shards,
+                budget=ctx.memory_budget, cfg=cfg, axis=axis).time_s(cfg)
+                for d in ctx.allowed}
         if ctx.memory_budget is not None:
             from ..memory.traffic import tiled_traffic
 
             cfg = self._cfg()
-            return min(ctx.allowed, key=lambda d: (
-                tiled_traffic(d, ctx.occ_a, ctx.occ_b, ctx.block_shape,
-                              ctx.memory_budget, cfg).time_s(cfg), d))
-        return min(ctx.allowed,
-                   key=lambda d: (sim.cost(ctx.shape, d, ctx.spec), d))
+            return {d: tiled_traffic(
+                d, ctx.occ_a, ctx.occ_b, ctx.block_shape,
+                ctx.memory_budget, cfg).time_s(cfg) for d in ctx.allowed}
+        return {d: sim.cost(ctx.shape, d, ctx.spec) for d in ctx.allowed}
+
+    def select(self, ctx: SelectionContext) -> str:
+        costs = self.price(ctx)
+        return min(ctx.allowed, key=lambda d: (costs[d], d))
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
                    spec: Optional[TPUSpec] = None,
@@ -250,17 +283,73 @@ class AutotunePolicy(SelectionPolicy):
     For each new pattern fingerprint the policy synthesizes values on the
     pattern, builds a throwaway fixed-dataflow plan per candidate on the
     *target* backend, times ``plan.apply`` wall-clock, and picks the fastest.
-    Results are cached by ``(fingerprint, backend, block_shape)`` so a
-    serving loop pays the sweep once per pattern — and repeat selections are
-    deterministic by construction.
+    Results are cached by ``(fingerprint, backend, block_shape, budget,
+    mesh, partition)`` so a serving loop pays the sweep once per pattern —
+    and repeat selections are deterministic by construction.
+
+    The in-memory cache is **LRU-bounded** (``maxsize``): under shifting
+    serving traffic an unbounded dict grows forever.  ``hits`` / ``misses``
+    / ``measurements`` / ``evictions`` counters mirror the ``PlanCache``
+    telemetry and surface through ``ServeEngine.stats["policy"]``.
+
+    ``db=`` (a path or :class:`repro.tune.TuneDB`; defaults to the
+    ``REPRO_TUNE_DB`` env var when unset) makes the measurement
+    cache **persistent and fleet-shared**: selects read through the
+    on-disk database before measuring and write every fresh sweep back, so
+    a second process (or a restarted server) starts hot — its first select
+    on a known pattern is a cold-start disk hit, not a sweep
+    (``db_hits``; asserted in tests/test_tune.py).
     """
 
     name = "autotune"
 
-    def __init__(self, reps: int = 2):
+    def __init__(self, reps: int = 2, maxsize: Optional[int] = 1024,
+                 db: Optional[Any] = None):
+        if maxsize is not None and maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1 or None, got {maxsize}")
         self.reps = reps
-        self._cache: Dict[tuple, str] = {}
+        self.maxsize = maxsize
+        self._cache: "OrderedDict[tuple, str]" = OrderedDict()
         self.measurements = 0      # sweep count, for tests/telemetry
+        self.hits = 0              # in-memory LRU hits
+        self.misses = 0
+        self.evictions = 0
+        self.db_hits = 0           # persistent-DB read-through hits
+        if db is None:
+            db = os.environ.get("REPRO_TUNE_DB") or None
+        if db is not None and not hasattr(db, "get"):
+            from ..tune.db import TuneDB   # lazy: tune imports this module
+
+            db = TuneDB(str(db))
+        self.db = db
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        out = dict(super().stats)
+        out.update({"hits": self.hits, "misses": self.misses,
+                    "measurements": self.measurements,
+                    "evictions": self.evictions,
+                    "size": len(self._cache), "maxsize": self.maxsize})
+        if self.db is not None:
+            out["db_hits"] = self.db_hits
+            out["db"] = self.db.stats
+        return out
+
+    def _db_key(self, ctx: SelectionContext) -> str:
+        from ..dist.partition import mesh_key   # lazy: dist uses api
+        from ..tune.db import db_key            # lazy: tune imports us
+
+        return db_key(ctx.fingerprint, ctx.backend.name, ctx.block_shape,
+                      memory_budget=ctx.memory_budget,
+                      mesh_key=mesh_key(ctx.mesh), partition=ctx.partition,
+                      accel=getattr(ctx.backend, "cfg", None))
+
+    def _remember(self, key: tuple, choice: str) -> None:
+        self._cache[key] = choice
+        self._cache.move_to_end(key)
+        if self.maxsize is not None and len(self._cache) > self.maxsize:
+            self._cache.popitem(last=False)
+            self.evictions += 1
 
     def select(self, ctx: SelectionContext) -> str:
         from ..dist.partition import mesh_key   # lazy: dist uses api
@@ -269,12 +358,30 @@ class AutotunePolicy(SelectionPolicy):
                ctx.memory_budget, mesh_key(ctx.mesh), ctx.partition)
         hit = self._cache.get(key)
         if hit is not None and hit in ctx.allowed:
+            self.hits += 1
+            self._cache.move_to_end(key)
             return hit
-        choice = self._measure(ctx)
-        self._cache[key] = choice
+        self.misses += 1
+        if self.db is not None:
+            rec = self.db.get(self._db_key(ctx))
+            if rec is not None and rec.get("choice") in ctx.allowed:
+                self.db_hits += 1
+                self._remember(key, rec["choice"])
+                return rec["choice"]
+        choice, timings = self._measure(ctx)
+        self._remember(key, choice)
+        if self.db is not None:
+            self.db.put(self._db_key(ctx), {
+                "choice": choice,
+                "timings_s": timings,
+                "fingerprint": ctx.fingerprint,
+                "backend": ctx.backend.name,
+                "block_shape": list(ctx.block_shape),
+                "reps": self.reps,
+            })
         return choice
 
-    def _measure(self, ctx: SelectionContext) -> str:
+    def _measure(self, ctx: SelectionContext) -> Tuple[str, Dict[str, float]]:
         from ..api import flexagon_plan  # lazy: api imports this module
 
         self.measurements += 1
@@ -303,7 +410,8 @@ class AutotunePolicy(SelectionPolicy):
                 np.asarray(plan.apply(a_c, b_c))    # block until ready
                 best = min(best, time.perf_counter() - t0)
             timings[d] = best
-        return min(ctx.allowed, key=lambda d: (timings[d], d))
+        choice = min(ctx.allowed, key=lambda d: (timings[d], d))
+        return choice, timings
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
                    spec: Optional[TPUSpec] = None,
@@ -371,9 +479,15 @@ def get_policy(policy: Union[str, SelectionPolicy, None],
     - ``dataflow="mixed"`` is *not* a pin: per-tile choices still need a
       pricing policy, so ``policy`` resolves exactly as it would for
       "auto" and the mixed planner calls its ``select_tile`` per tile;
-    - ``policy`` may be a name ("heuristic" / "simulator" / "autotune" — or a
-      dataflow name, shorthand for a fixed pin) or an instance;
+    - ``policy`` may be a name ("heuristic" / "simulator" / "autotune" /
+      "learned" — or a dataflow name, shorthand for a fixed pin) or an
+      instance;
     - neither given → :class:`HeuristicPolicy`.
+
+    ``"learned"`` resolves to :class:`repro.tune.LearnedPolicy`: if
+    ``REPRO_TUNE_MODEL`` names a fitted artifact it is loaded once; with
+    no artifact the policy is model-less and transparently falls back to
+    the heuristic on every select (counted in its ``stats``).
     """
     if dataflow not in ("auto", "mixed"):
         return FixedPolicy(dataflow)
@@ -383,14 +497,20 @@ def get_policy(policy: Union[str, SelectionPolicy, None],
         return policy
     if policy in df.DATAFLOWS:
         return FixedPolicy(policy)
-    if policy not in ("heuristic", "simulator", "autotune"):
+    if policy not in ("heuristic", "simulator", "autotune", "learned"):
         raise KeyError(f"unknown policy {policy!r}; expected "
-                       "'heuristic', 'simulator', 'autotune', a dataflow "
-                       "name, or a SelectionPolicy instance")
+                       "'heuristic', 'simulator', 'autotune', 'learned', "
+                       "a dataflow name, or a SelectionPolicy instance")
     inst = _NAMED.get(policy)
     if inst is None:
-        inst = {"heuristic": HeuristicPolicy,
-                "simulator": SimulatorPolicy,
-                "autotune": AutotunePolicy}[policy]()
+        if policy == "learned":
+            from ..tune.learned import LearnedPolicy   # lazy: tune uses us
+
+            path = os.environ.get("REPRO_TUNE_MODEL")
+            inst = LearnedPolicy.load(path) if path else LearnedPolicy()
+        else:
+            inst = {"heuristic": HeuristicPolicy,
+                    "simulator": SimulatorPolicy,
+                    "autotune": AutotunePolicy}[policy]()
         _NAMED[policy] = inst
     return inst

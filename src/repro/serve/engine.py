@@ -126,6 +126,14 @@ class ServeEngine:
             cache_stats = getattr(self.sparse_ffn, "cache_stats", None)
             if cache_stats is not None:
                 self.stats["plan_cache"] = cache_stats
+            # selection-policy telemetry (autotune hit/miss/measurement
+            # counters, learned fallback counts — DESIGN.md §16)
+            pol = getattr(self.sparse_ffn, "policy", None)
+            if pol is not None:
+                pol_stats = getattr(pol, "stats", None)
+                self.stats["policy"] = (dict(pol_stats)
+                                        if isinstance(pol_stats, dict)
+                                        else {"name": str(pol)})
             # sharded fused decode: shard / collective telemetry from the
             # decode-shape plans (DESIGN.md §13)
             entry = self.decode_ffn

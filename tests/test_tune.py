@@ -1,0 +1,529 @@
+"""repro.tune: learned dataflow selection + the shared autotune database.
+
+Pins the PR's payoff gate (DESIGN.md §16):
+
+(a) the learned policy agrees with ``SimulatorPolicy`` on >= 90% of
+    held-out patterns,
+(b) its median ``select`` latency is >= 100x lower than the simulator's
+    on the same contexts, and
+(c) two ``AutotunePolicy`` instances sharing one DB path perform exactly
+    one measurement sweep between them.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro import MemoryBudget
+from repro.backends import (SelectionContext, allowed_dataflows,
+                            get_backend, get_policy)
+from repro.backends.policies import (AutotunePolicy, HeuristicPolicy,
+                                     SimulatorPolicy)
+from repro.core import DATAFLOWS, LayerShape
+from repro.core.selector import TPUSpec
+from repro.tune import (FEATURE_NAMES, N_FEATURES, LearnedPolicy, TuneDB,
+                        accelerator_hash, context_features, corpus_matrices,
+                        db_key, fit_examples, generate_contexts,
+                        generate_corpus, load_corpus, proxy_costs,
+                        save_corpus, split_corpus)
+from repro.tune.learned import CLASSES
+
+BS = (16, 16, 16)
+
+
+def _context(m=64, k=64, n=96, da=0.5, db=0.6, seed=0, budget=None,
+             allowed=None, backend="reference"):
+    """One SelectionContext on a seeded random block pattern."""
+    be = get_backend(backend)
+    rng = np.random.default_rng(seed)
+    bm, bk, bn = BS
+    occ_a = rng.random((m // bm, k // bk)) < da
+    occ_b = rng.random((k // bk, n // bn)) < db
+    occ_a[0, 0] = occ_b[0, 0] = True          # never a fully-empty operand
+    shape = LayerShape(m, k, n, float(occ_a.mean()), float(occ_b.mean()),
+                       block=BS)
+    return SelectionContext(
+        shape=shape, block_shape=BS, occ_a=occ_a, occ_b=occ_b,
+        fingerprint=f"test:{m}x{k}x{n}:{da}:{db}:{seed}",
+        backend=be, spec=TPUSpec(),
+        allowed=tuple(allowed) if allowed else allowed_dataflows(be, BS),
+        memory_budget=budget)
+
+
+# -- fitted policy shared across the gate tests ------------------------------
+
+@pytest.fixture(scope="module")
+def fitted():
+    """(policy, train, held_out) — the acceptance-test configuration.
+
+    Quick corpus, margin-filtered labels, grouped split, bagged forest:
+    the same recipe the CI tune-smoke lane runs via the CLI.
+    """
+    examples = generate_corpus(n_synthetic=1600, quick=True, seed=0,
+                               min_margin=0.1)
+    train, held_out = split_corpus(examples, held_out=0.2, seed=0)
+    policy = fit_examples(train, model="forest")
+    return policy, train, held_out
+
+
+# -- payoff gate --------------------------------------------------------------
+
+def test_gate_agreement_90pct(fitted):
+    """(a) >= 90% held-out agreement with the simulator's labels."""
+    policy, train, held_out = fitted
+    assert len(held_out) >= 100          # a real held-out set, not a token
+    X, y = corpus_matrices(held_out)
+    pred = policy.model.predict_proba(X).argmax(axis=1)
+    agreement = float((pred == y).mean())
+    assert agreement >= 0.90, f"held-out agreement {agreement:.3f} < 0.90"
+
+
+def test_gate_latency_100x(fitted):
+    """(b) median select latency >= 100x below the simulator's.
+
+    Measured on large no-budget grids — the serving-relevant regime,
+    where the simulator samples and prices big element patterns while
+    the learned path stays a fixed-cost feature extraction + tree walk.
+    The ratio (not the absolute times) is asserted, so a loaded CI box
+    shifts both sides together.
+    """
+    policy = fitted[0]
+    sim = SimulatorPolicy()
+    contexts = [c for c, _ in generate_contexts(
+        40, quick=False, seed=7, max_grid=64, include_configs=False,
+        budget_fraction=0.0)
+        if min(c.occ_a.shape[0], c.occ_a.shape[1], c.occ_b.shape[1]) >= 32
+    ][:5]
+    assert len(contexts) == 5
+    sim_t, learned_t = [], []
+    for ctx in contexts:
+        t0 = time.perf_counter()
+        sim.select(ctx)
+        sim_t.append(time.perf_counter() - t0)
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            policy.select(ctx)
+            best = min(best, time.perf_counter() - t0)
+        learned_t.append(best)
+    ratio = float(np.median(sim_t)) / max(float(np.median(learned_t)), 1e-9)
+    assert ratio >= 100.0, (
+        f"simulator {np.median(sim_t) * 1e3:.1f}ms vs learned "
+        f"{np.median(learned_t) * 1e6:.0f}us = {ratio:.0f}x < 100x")
+
+
+def test_gate_shared_db_one_sweep(tmp_path):
+    """(c) two AutotunePolicy instances, one DB path, one sweep total."""
+    path = str(tmp_path / "tune_db.jsonl")
+    ctx = _context(m=32, k=32, n=32, allowed=("ip_m", "gust_m"))
+    p1 = AutotunePolicy(reps=1, db=path)
+    p2 = AutotunePolicy(reps=1, db=path)
+    c1 = p1.select(ctx)
+    c2 = p2.select(ctx)            # cold instance: disk hit, not a sweep
+    assert c1 == c2
+    assert p1.measurements + p2.measurements == 1
+    assert p2.db_hits == 1 and p2.measurements == 0
+    # a third, fresh process-equivalent (new TuneDB object) is also hot
+    p3 = AutotunePolicy(reps=1, db=path)
+    assert p3.select(ctx) == c1 and p3.measurements == 0
+
+
+# -- AutotunePolicy cache: bounded LRU + telemetry ----------------------------
+
+def test_autotune_lru_bounded_and_counted():
+    pol = AutotunePolicy(reps=1, maxsize=2)
+    ctxs = [_context(m=32, k=32, n=32, seed=s, allowed=("ip_m", "gust_m"))
+            for s in range(3)]
+    for ctx in ctxs:
+        pol.select(ctx)
+    assert pol.measurements == 3 and pol.misses == 3
+    assert pol.evictions == 1 and pol.stats["size"] == 2
+    pol.select(ctxs[2])                       # still resident
+    assert pol.hits == 1 and pol.measurements == 3
+    pol.select(ctxs[0])                       # evicted: re-measured
+    assert pol.measurements == 4
+    stats = pol.stats
+    assert stats["name"] == "autotune" and stats["maxsize"] == 2
+    assert {"hits", "misses", "measurements", "evictions"} <= stats.keys()
+
+
+def test_autotune_db_from_env(tmp_path, monkeypatch):
+    path = str(tmp_path / "env_db.jsonl")
+    monkeypatch.setenv("REPRO_TUNE_DB", path)
+    pol = AutotunePolicy(reps=1)
+    assert pol.db is not None and pol.db.path == path
+    monkeypatch.delenv("REPRO_TUNE_DB")
+    assert AutotunePolicy(reps=1).db is None
+
+
+def test_autotune_maxsize_validation():
+    with pytest.raises(ValueError):
+        AutotunePolicy(maxsize=0)
+    AutotunePolicy(maxsize=None)              # unbounded is explicit, fine
+
+
+def test_select_for_shape_fingerprint_block_and_dtype():
+    """The shape-only fingerprint must split on block shape and dtype:
+    the same logical shape at two element widths measures differently."""
+    pol = AutotunePolicy(reps=1)
+    s16 = LayerShape(32, 32, 32, 1.0, 1.0, block=(16, 16, 16))
+    pol.select_for_shape(s16)
+    pol.select_for_shape(s16)                       # cache hit
+    assert pol.measurements == 1 and pol.hits == 1
+    pol.select_for_shape(s16, dtype="bfloat16")     # new key: dtype
+    assert pol.measurements == 2
+    s32 = LayerShape(32, 32, 32, 1.0, 1.0, block=(32, 32, 32))
+    pol.select_for_shape(s32)                       # new key: block shape
+    assert pol.measurements == 3
+
+
+# -- TuneDB: durable, shared, compactable -------------------------------------
+
+def test_tunedb_roundtrip_across_instances(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    a, b = TuneDB(path), TuneDB(path)
+    a.put("k1", {"choice": "ip_m"})
+    assert b.get("k1")["choice"] == "ip_m"    # read-through sees the append
+    b.put("k2", {"choice": "op_n"})
+    assert a.get("k2")["choice"] == "op_n"
+    assert len(a) == 2 and "k1" in b
+    assert a.get("nope") is None and a.misses >= 1
+
+
+def test_tunedb_compaction_keeps_newest(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    db = TuneDB(path)
+    for i in range(10):
+        db.put("k", {"choice": f"c{i}"})
+    assert db.compact() == 9
+    assert db.get("k")["choice"] == "c9"
+    fresh = TuneDB(path)                      # durable after the rewrite
+    assert len(fresh) == 1 and fresh.get("k")["choice"] == "c9"
+
+
+def test_tunedb_auto_compacts_dominated_files(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    db = TuneDB(path, compact_above=4)
+    for i in range(12):
+        db.put("k", {"choice": f"c{i}"})
+    with open(path) as f:
+        lines = sum(1 for _ in f)
+    assert lines < 12 and db.get("k")["choice"] == "c11"
+
+
+def test_tunedb_concurrent_writer_process(tmp_path):
+    """Appends from another process are visible without re-opening."""
+    path = str(tmp_path / "db.jsonl")
+    db = TuneDB(path)
+    db.put("mine", {"choice": "ip_m"})
+    child = (
+        "from repro.tune.db import TuneDB\n"
+        f"db = TuneDB({path!r})\n"
+        "for i in range(20):\n"
+        "    db.put(f'child{i}', {'choice': 'gust_n'})\n"
+        "assert db.get('mine')['choice'] == 'ip_m'\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(repro.__file__))
+    subprocess.run([sys.executable, "-c", child], check=True, env=env)
+    assert db.get("child19")["choice"] == "gust_n"
+    assert len(db) == 21
+
+
+def test_tunedb_tolerates_torn_line(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    db = TuneDB(path)
+    db.put("good", {"choice": "ip_m"})
+    with open(path, "a") as f:
+        f.write('{"key": "torn", "choi')      # writer died mid-append
+    fresh = TuneDB(path)
+    assert fresh.get("good")["choice"] == "ip_m"
+    assert fresh.get("torn") is None
+
+
+# -- DB keys: stable across processes and configurations ----------------------
+
+def test_db_key_splits_every_axis():
+    base = dict(fingerprint="fp", backend_name="reference",
+                block_shape=(16, 16, 16))
+    k0 = db_key(**base)
+    assert k0 == db_key(**base)               # deterministic
+    assert k0 != db_key(**{**base, "fingerprint": "fp2"})
+    assert k0 != db_key(**{**base, "backend_name": "pallas"})
+    assert k0 != db_key(**{**base, "block_shape": (32, 32, 32)})
+    assert k0 != db_key(**base, memory_budget=MemoryBudget(1 << 10, 1 << 11))
+    assert k0 != db_key(**base, mesh_key=(("x", 4),))
+    assert k0 != db_key(**base, accel={"num_multipliers": 64})
+
+
+def test_pattern_fingerprint_stable_cross_process():
+    """The pattern fingerprint (occupancy + shapes + block shape) must
+    re-derive byte-identically in a fresh interpreter: it heads every
+    durable DB key, so instability would silently shatter the fleet's
+    shared database into per-process shards."""
+    from repro.api import _fingerprint
+
+    rng = np.random.default_rng(0)
+    occ_a = rng.random((7, 5)) < 0.4
+    occ_b = rng.random((5, 9)) < 0.7
+    local = _fingerprint(occ_a, occ_b, (112, 80, 144), BS)
+    child = (
+        "import numpy as np\n"
+        "from repro.api import _fingerprint\n"
+        "rng = np.random.default_rng(0)\n"
+        "occ_a = rng.random((7, 5)) < 0.4\n"
+        "occ_b = rng.random((5, 9)) < 0.7\n"
+        "print(_fingerprint(occ_a, occ_b, (112, 80, 144), (16, 16, 16)))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(repro.__file__))
+    env["PYTHONHASHSEED"] = "999"
+    proc = subprocess.run([sys.executable, "-c", child], check=True,
+                          capture_output=True, text=True, env=env)
+    assert proc.stdout.strip() == local
+
+
+def test_db_key_stable_cross_process():
+    """Property: the durable key re-derives bit-identically in a fresh
+    interpreter with a different hash seed — the fleet-sharing contract."""
+    cases = [
+        ("fp:abc", "reference", (16, 16, 16), None),
+        ("fp:xyz/tile3", "pallas", (32, 16, 8), (4096, 8192)),
+        ("shape:64x64x96:0.5000:0.6000:b16x16x16:float32",
+         "simulator", (16, 16, 16), None),
+    ]
+    local = []
+    for fp, be, bs, budget in cases:
+        mb = MemoryBudget(*budget) if budget else None
+        local.append(db_key(fp, be, bs, memory_budget=mb,
+                            accel={"num_multipliers": 64}))
+    child = (
+        "import json, sys\n"
+        "from repro.memory import MemoryBudget\n"
+        "from repro.tune.db import db_key\n"
+        "out = []\n"
+        "for fp, be, bs, budget in json.loads(sys.argv[1]):\n"
+        "    mb = MemoryBudget(*budget) if budget else None\n"
+        "    out.append(db_key(fp, be, tuple(bs), memory_budget=mb,\n"
+        "               accel={'num_multipliers': 64}))\n"
+        "print(json.dumps(out))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(repro.__file__))
+    env["PYTHONHASHSEED"] = "12345"           # keys must not depend on it
+    proc = subprocess.run(
+        [sys.executable, "-c", child, json.dumps(cases)],
+        check=True, capture_output=True, text=True, env=env)
+    assert json.loads(proc.stdout) == local
+
+
+def test_accelerator_hash_stable_and_discriminating():
+    from repro.core.simulator.config import PAPER_CONFIG
+
+    h = accelerator_hash(PAPER_CONFIG)
+    assert h == accelerator_hash(PAPER_CONFIG) and len(h) == 16
+    assert accelerator_hash(None) == "-"
+    assert accelerator_hash({"a": 1}) != accelerator_hash({"a": 2})
+    # dict ordering must not matter (sorted canonical form)
+    assert accelerator_hash({"a": 1, "b": 2}) == \
+        accelerator_hash({"b": 2, "a": 1})
+
+
+# -- features -----------------------------------------------------------------
+
+def test_feature_vector_layout_and_determinism():
+    ctx = _context()
+    f1, f2 = context_features(ctx), context_features(ctx)
+    assert f1.shape == (N_FEATURES,) == (len(FEATURE_NAMES),)
+    assert np.array_equal(f1, f2) and np.isfinite(f1).all()
+
+
+def test_proxy_costs_positive_and_mn_dual():
+    pc = proxy_costs(128, 256, 64, 0.3, 0.7)
+    assert set(pc) == set(DATAFLOWS)
+    assert all(v > 0 for v in pc.values())
+    # N variants are the M variants of the transposed problem
+    dual = proxy_costs(64, 256, 128, 0.7, 0.3)
+    for base in ("ip", "op", "gust"):
+        assert pc[base + "_n"] == pytest.approx(dual[base + "_m"])
+
+
+def test_budget_context_features_differ():
+    free = context_features(_context())
+    budgeted = context_features(_context(budget=MemoryBudget(4 << 10,
+                                                             8 << 10)))
+    assert not np.array_equal(free, budgeted)
+    has_budget = FEATURE_NAMES.index("has_budget")
+    assert free[has_budget] == 0.0 and budgeted[has_budget] == 1.0
+
+
+# -- corpus -------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_corpus():
+    return generate_corpus(n_synthetic=60, quick=True, seed=3,
+                           min_margin=0.1)
+
+
+def test_corpus_records_and_roundtrip(small_corpus, tmp_path):
+    assert len(small_corpus) > 20
+    for ex in small_corpus:
+        assert ex["label"] in DATAFLOWS
+        assert len(ex["features"]) == N_FEATURES
+        assert ex["kind"] in ("whole", "tile")
+        assert ex["margin"] is None or ex["margin"] >= 0.1
+    # budget-bearing contexts contribute per-tile labels only (§16)
+    assert all(ex["budget"] is None
+               for ex in small_corpus if ex["kind"] == "whole")
+    path = str(tmp_path / "corpus.jsonl")
+    save_corpus(path, small_corpus)
+    again = load_corpus(path)
+    assert [ex["label"] for ex in again] == \
+        [ex["label"] for ex in small_corpus]
+    assert np.allclose([ex["features"] for ex in again],
+                       [ex["features"] for ex in small_corpus])
+
+
+def test_split_corpus_grouped_no_leak(small_corpus):
+    train, held_out = split_corpus(small_corpus, held_out=0.3, seed=0)
+    assert len(train) + len(held_out) == len(small_corpus)
+    assert held_out and train
+    leaked = {ex["group"] for ex in train} & {ex["group"] for ex in held_out}
+    assert not leaked, f"groups on both sides: {sorted(leaked)[:5]}"
+
+
+def test_margin_filter_drops_near_ties():
+    loose = generate_corpus(n_synthetic=60, quick=True, seed=3,
+                            min_margin=0.0)
+    tight = generate_corpus(n_synthetic=60, quick=True, seed=3,
+                            min_margin=0.3)
+    assert len(tight) < len(loose)
+    assert all(ex["margin"] is None or ex["margin"] >= 0.3 for ex in tight)
+
+
+# -- LearnedPolicy: artifacts + fallback semantics -----------------------------
+
+def test_learned_save_load_roundtrip(fitted, tmp_path):
+    policy = fitted[0]
+    path = str(tmp_path / "model.npz")
+    policy.save(path)
+    again = LearnedPolicy.load(path)
+    assert again.model.kind == policy.model.kind
+    assert again.threshold == policy.threshold
+    X, _ = corpus_matrices(fitted[2][:32])
+    np.testing.assert_allclose(policy.model.predict_proba(X),
+                               again.model.predict_proba(X), atol=1e-6)
+    ctx = _context(seed=11)
+    assert again.select(ctx) == policy.select(ctx)
+
+
+@pytest.mark.parametrize("kind", ["tree", "mlp"])
+def test_learned_other_models_roundtrip(small_corpus, tmp_path, kind):
+    policy = fit_examples(small_corpus, model=kind, steps=60)
+    path = str(tmp_path / f"{kind}.npz")
+    policy.save(path)
+    again = LearnedPolicy.load(path)
+    X, _ = corpus_matrices(small_corpus[:16])
+    np.testing.assert_allclose(policy.model.predict_proba(X),
+                               again.model.predict_proba(X), atol=1e-5)
+
+
+def test_learned_respects_allowed(fitted):
+    policy = fitted[0]
+    for allowed in (("op_m", "op_n"), ("gust_m",), ("ip_n", "gust_n")):
+        ctx = _context(seed=5, allowed=allowed)
+        assert policy.select(ctx) in allowed
+        assert policy.select_tile(ctx) in allowed
+
+
+def test_learned_budget_fallback_is_structural(fitted):
+    policy = fitted[0]
+    before = policy.budget_fallbacks
+    ctx = _context(budget=MemoryBudget(4 << 10, 8 << 10))
+    choice = policy.select(ctx)
+    assert policy.budget_fallbacks == before + 1
+    assert choice == HeuristicPolicy().select(ctx)
+    # per-tile selection (budget-free by construction) still predicts
+    tile_ctx = _context(seed=6)
+    fb = policy.fallbacks
+    policy.select_tile(tile_ctx)
+    assert policy.fallbacks == fb              # no fallback needed
+
+
+def test_learned_modelless_and_threshold_fallback(fitted):
+    ctx = _context(seed=9)
+    bare = LearnedPolicy()                     # no model artifact
+    assert bare.select(ctx) == HeuristicPolicy().select(ctx)
+    assert bare.fallbacks == 1 and bare.stats["model"] is None
+    timid = LearnedPolicy(model=fitted[0].model, threshold=1.01)
+    assert timid.select(ctx) == HeuristicPolicy().select(ctx)
+    assert timid.fallbacks == 1
+
+
+def test_get_policy_learned(fitted, tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_TUNE_MODEL", raising=False)
+    pol = get_policy("learned")
+    assert isinstance(pol, LearnedPolicy)
+    path = str(tmp_path / "model.npz")
+    fitted[0].save(path)
+    loaded = LearnedPolicy.load(path)
+    ctx = _context(seed=12)
+    assert loaded.select(ctx) == fitted[0].select(ctx)
+
+
+# -- serving telemetry ---------------------------------------------------------
+
+def test_engine_surfaces_policy_stats():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+    from repro.models.ffn import ffn_init
+    from repro.models.sparse_linear import compress_ffn
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("smollm-360m", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fcfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, d_ff=96, vocab=64, ffn_block_sparsity=0.4)
+    fparams = ffn_init(jax.random.PRNGKey(0), fcfg)
+    fparams["block_mask"] = (jax.random.uniform(
+        jax.random.PRNGKey(9), (4, 6)) > 0.4).astype(jnp.float32)
+    pol = AutotunePolicy(reps=1, maxsize=8)
+    comp = compress_ffn(fparams, tokens=2, block=16, policy=pol)
+    eng = ServeEngine(model, params, slots=2, max_seq=64, sparse_ffn=comp)
+    stats = eng.stats["policy"]
+    assert stats["name"] == "autotune"
+    assert stats["measurements"] == pol.measurements >= 1
+    assert {"hits", "misses", "evictions", "size", "maxsize"} <= stats.keys()
+
+
+# -- CLI -----------------------------------------------------------------------
+
+def test_cli_corpus_fit_eval_roundtrip(tmp_path):
+    from repro.tune.__main__ import main
+
+    corpus = str(tmp_path / "corpus.jsonl")
+    model = str(tmp_path / "model.npz")
+    assert main(["corpus", "--quick", "--n", "60", "--seed", "3",
+                 "--out", corpus]) == 0
+    size = os.path.getsize(corpus)
+    # cached-artifact path: a second run with --skip-existing is a no-op
+    assert main(["corpus", "--quick", "--n", "999", "--out", corpus,
+                 "--skip-existing"]) == 0
+    assert os.path.getsize(corpus) == size
+    assert main(["fit", "--corpus", corpus, "--out", model,
+                 "--model", "tree"]) == 0
+    assert main(["eval", "--corpus", corpus, "--model", model,
+                 "--min-agreement", "0.0"]) == 0
+    # the gate flag actually gates
+    assert main(["eval", "--corpus", corpus, "--model", model,
+                 "--min-agreement", "1.01"]) == 1
