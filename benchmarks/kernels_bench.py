@@ -34,6 +34,10 @@ CLI (the CI smoke step)::
 ``--verify`` additionally gates every (untimed) plan build behind
 ``repro.analysis.verify_plan`` — the timed ``plan_build``/``per_call``
 lambdas stay unverified so latency rows remain comparable across runs.
+``--trace out.json`` turns on ``repro.obs`` tracing for the whole run and
+writes a Chrome-trace/Perfetto JSON of every phase-1/apply span.  Policy
+rows report ``selection_latency_s`` as a summary over repeats
+(count/mean/min/max/p50/p99), not a single draw.
 """
 from __future__ import annotations
 
@@ -162,18 +166,31 @@ def run(quick: bool = False, verify: bool = False) -> list[Row]:
             fingerprint=f"bench:{name}", backend=get_backend("reference"),
             spec=TPUSpec(), allowed=allowed_dataflows(
                 get_backend("reference"), BS))
+        sel_reps = 5 if quick else 15
         for pname in ("heuristic", "simulator", "learned"):
             pol = get_policy(pname)
-            t0 = time.perf_counter()
-            choice = pol.select(ctx)
-            sel_s = time.perf_counter() - t0
+            choice = pol.select(ctx)        # warmup (fills policy caches)
+            # selection latency as a distribution, not a single draw: the
+            # row reports p50/p99 over repeats (scheduler noise on shared
+            # CI boxes makes one-shot numbers useless for trajectories)
+            lats = []
+            for _ in range(sel_reps):
+                t0 = time.perf_counter()
+                assert pol.select(ctx) == choice
+                lats.append(time.perf_counter() - t0)
+            sel = {"count": len(lats),
+                   "mean": float(np.mean(lats)),
+                   "min": float(np.min(lats)),
+                   "max": float(np.max(lats)),
+                   "p50": float(np.percentile(lats, 50)),
+                   "p99": float(np.percentile(lats, 99))}
             plan = flexagon_plan(a, b, block_shape=BS, policy=pol)
             assert plan.dataflow == choice, (name, pname)
             rows.append(Row(f"kernels/{name}/policy_{pname}",
-                            sel_s * 1e6,
+                            sel["p50"] * 1e6,
                             f"choice={plan.dataflow}",
                             extra={"policy": pname,
-                                   "selection_latency_s": sel_s}))
+                                   "selection_latency_s": sel}))
     return rows
 
 
@@ -186,7 +203,14 @@ def main() -> None:
     ap.add_argument("--verify", action="store_true",
                     help="gate every built plan behind "
                          "repro.analysis.verify_plan (raises on error)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="capture a repro.obs span trace of the whole run "
+                         "and write Chrome-trace/Perfetto JSON here")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+
+        obs.enable()
     rows = run(quick=args.quick, verify=args.verify)
     print("name,us_per_call,derived")
     for row in rows:
@@ -200,6 +224,10 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")
+    if args.trace:
+        n = obs.get_tracer().save_chrome(args.trace)
+        print(f"# wrote {n} spans -> {args.trace} "
+              "(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

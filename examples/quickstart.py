@@ -157,6 +157,30 @@ def main():
           f"single {best_d!r} {singles[best_d] * 1e6:.2f} us")
     assert mixed_s <= singles[best_d] * (1 + 1e-9)
 
+    print("== observability: trace the plan lifecycle into Perfetto ==")
+    # repro.obs (DESIGN.md §17): spans around phase 1 (select/tables/
+    # prepare, per-tile choices) and every unjitted apply, counters +
+    # latency histograms in the metrics registry.  Off by default
+    # (REPRO_TRACE) — enable() flips it for this process.
+    from repro import obs
+
+    obs.enable()
+    traced_plan = flexagon_plan(ah, bh, dataflow="mixed",
+                                block_shape=(8, 8, 8),
+                                memory_budget=hbudget, policy="simulator",
+                                backend="simulator")
+    for _ in range(10):                 # unjitted: one apply span per step
+        np.asarray(traced_plan.apply(ah, bh))
+    n = obs.get_tracer().save_chrome("quickstart_trace.json")
+    reg = obs.get_registry()
+    print(f"  {n} spans -> quickstart_trace.json "
+          "(open at https://ui.perfetto.dev)")
+    print(f"  metrics: plan.builds={reg.value('plan.builds'):.0f}, "
+          f"select_tile p99 "
+          f"{reg.get('policy.select_tile_s').quantile(0.99) * 1e6:.0f} us "
+          f"over {reg.value('policy.select_tile_s'):.0f} tile choices")
+    obs.disable()
+
     print("== distributed: mesh= partitions the plan across devices ==")
     # the dataflow's Partitioner shards the block grid (IP: output panels,
     # OP: k-slabs + psum merge, Gust: row bands); apply is one shard_map

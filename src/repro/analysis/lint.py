@@ -29,6 +29,21 @@ phase-1 / phase-2 split the codebase is built around (DESIGN.md §15):
     dispatches to).  Anywhere else bypasses interpret-mode resolution and
     backend capability checks.
 
+``obs-time`` (error)
+    No direct ``time.time()`` / ``time.monotonic()`` /
+    ``time.perf_counter()`` calls in ``src/repro/`` outside
+    ``repro.obs`` and the allowlisted benchmark drivers — telemetry goes
+    through :mod:`repro.obs` (``obs.now_ns`` for raw timestamps, ``span``
+    / histogram ``observe`` for latencies), so every subsystem shares one
+    monotonic clock and one export path.  Escape hatch for deliberate
+    measurement loops: append ``# lint: time-ok`` to the line.
+
+``obs-stats`` (warning)
+    No ad-hoc stats-dict accumulation (``self.stats[...] += ...`` /
+    ``self.stats = {...}``) outside ``repro.obs`` — counters belong in a
+    :class:`repro.obs.MetricsRegistry` so they snapshot, export, and
+    aggregate uniformly.
+
 The call graph is name-keyed and deliberately over-approximate: an edge is
 recorded for every called name, every referenced function name, and every
 function name referenced from a module-level binding (dispatch tables like
@@ -53,6 +68,18 @@ ENTRY_NAMES = ("apply", "execute", "__call__")
 PRAGMA = "# lint:"
 PALLAS_ALLOWED = ("backends/pallas.py",)
 PALLAS_ALLOWED_DIRS = ("/kernels/",)
+#: host-clock calls the obs layer replaces (obs.now_ns / span / histograms)
+OBS_TIME_FUNCS = ("time", "monotonic", "perf_counter", "perf_counter_ns",
+                  "process_time")
+#: files/dirs where raw clocks stay legitimate: the obs layer itself, and
+#: standalone benchmark drivers that time whole runs for their own report
+OBS_TIME_ALLOWED = (
+    "repro/obs/",
+    "repro/launch/roofline.py",
+    "repro/launch/dryrun.py",
+    "repro/launch/train.py",
+    "repro/tune/__main__.py",
+)
 
 
 def _is_entry(name: str) -> bool:
@@ -267,14 +294,52 @@ def _dataclass_info(node: ast.ClassDef) -> Tuple[bool, bool, bool]:
     return is_dc, frozen, registered
 
 
+def _obs_scope(rel: str) -> bool:
+    """Is this file policed by the obs-time / obs-stats rules?
+
+    ``src/repro/`` only (benchmarks and tests time things freely), minus
+    the allowlist: the obs layer itself and standalone run-report drivers.
+    """
+    if "repro/" not in rel:
+        return False
+    return not any(allowed in rel for allowed in OBS_TIME_ALLOWED)
+
+
 def _lint_module(mod: _Module, reachable: Set[int],
                  diags: List[PlanDiagnostic]) -> None:
     rel = mod.path.replace(os.sep, "/")
 
-    # -- pallas-call / plan-pytree: whole-file rules ----------------------
+    # -- pallas-call / plan-pytree / obs-*: whole-file rules --------------
     allowed_pallas = rel.endswith(PALLAS_ALLOWED) \
         or any(d in rel for d in PALLAS_ALLOWED_DIRS)
+    obs_scope = _obs_scope(rel)
     for node in ast.walk(mod.tree):
+        if obs_scope and isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and _root_name(node.func) == "time" \
+                and node.func.attr in OBS_TIME_FUNCS \
+                and not _line_has_pragma(mod, node.lineno):
+            diags.append(PlanDiagnostic(
+                code="obs-time", severity=ERROR,
+                message=f"direct time.{node.func.attr}() outside repro.obs "
+                        "— telemetry bypasses the shared clock/export path",
+                location=f"{rel}:{node.lineno}",
+                hint="use repro.obs.now_ns (timestamps), span() (regions), "
+                     "or a registry histogram (latencies); append "
+                     "'# lint: time-ok' for a deliberate measurement loop"))
+        if obs_scope and isinstance(node, ast.AugAssign) \
+                and isinstance(node.target, ast.Subscript) \
+                and _terminal_name(node.target.value) == "stats" \
+                and isinstance(node.target.slice, ast.Constant) \
+                and isinstance(node.target.slice.value, str) \
+                and not _line_has_pragma(mod, node.lineno):
+            diags.append(PlanDiagnostic(
+                code="obs-stats", severity=WARNING,
+                message="ad-hoc stats-dict accumulation "
+                        "(stats[...] += ...) outside repro.obs",
+                location=f"{rel}:{node.lineno}",
+                hint="increment a MetricsRegistry counter instead; expose "
+                     "the dict as a snapshot view if callers need it"))
         if isinstance(node, ast.Call) \
                 and _terminal_name(node.func) == "pallas_call" \
                 and not allowed_pallas \

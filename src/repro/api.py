@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import obs
 from .backends import ExecutionBackend, get_backend
 from .backends.base import TABLE3_FORMATS as _TABLE3_FORMATS
 from .backends.base import allowed_dataflows
@@ -552,7 +553,42 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
     violation raises :class:`repro.analysis.PlanVerificationError` instead
     of handing out a corrupt plan.  ``None`` defers to ``REPRO_VERIFY``
     (on in the test suite, off otherwise).
+
+    Phase 1 is observable (:mod:`repro.obs`): the build runs under a
+    ``plan.phase1`` span with ``plan.select`` / ``plan.schedule`` /
+    ``plan.tables`` / ``plan.prepare`` children when ``REPRO_TRACE`` is on,
+    and counts into ``plan.builds`` / ``plan.build_s`` / ``policy.select_s``
+    in the global :class:`repro.obs.MetricsRegistry`.
     """
+    t0 = obs.now_ns()
+    with obs.span("plan.phase1", dataflow=dataflow) as sp:
+        plan = _plan_phase1(
+            a_spec, b_spec, dataflow=dataflow, block_shape=block_shape,
+            spec=spec, backend=backend, policy=policy, use_pallas=use_pallas,
+            interpret=interpret, memory_budget=memory_budget, mesh=mesh,
+            partition=partition, tile_dataflows=tile_dataflows, verify=verify)
+        sp.set(chosen=plan.dataflow, kind=type(plan).__name__,
+               backend=plan.backend)
+    reg = obs.get_registry()
+    reg.counter("plan.builds").inc()
+    reg.histogram("plan.build_s").observe((obs.now_ns() - t0) / 1e9)
+    return plan
+
+
+def _plan_phase1(a_spec: OperandSpec, b_spec: OperandSpec, *,
+                 dataflow: str = "auto",
+                 block_shape: Tuple[int, int, int] = (128, 128, 128),
+                 spec: TPUSpec = TPUSpec(),
+                 backend: BackendArg = None,
+                 policy: PolicyArg = None,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 memory_budget: Optional[Any] = None,
+                 mesh: Optional[Any] = None,
+                 partition: Optional[Any] = None,
+                 tile_dataflows: Optional[Tuple[str, ...]] = None,
+                 verify: Optional[bool] = None) -> FlexagonPlan:
+    """:func:`flexagon_plan` body (the public wrapper adds the obs seam)."""
     bm, bk, bn = block_shape
     (m, k), occ_a = _pattern_of(a_spec, (bm, bk))
     (k2, n), occ_b = _pattern_of(b_spec, (bk, bn))
@@ -588,7 +624,11 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                            memory_budget=memory_budget, mesh=mesh,
                            partition=partition)
     if not mixed:
-        dataflow = policy_obj.select(ctx)
+        t_sel = obs.now_ns()
+        with obs.span("plan.select", policy=type(policy_obj).__name__):
+            dataflow = policy_obj.select(ctx)
+        obs.get_registry().histogram("policy.select_s").observe(
+            (obs.now_ns() - t_sel) / 1e9)
 
     if mesh is not None or partition is not None:
         from .dist.sharded_plan import plan_sharded   # lazy: dist uses api
@@ -631,9 +671,12 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
                 fingerprint=fingerprint)[0]
 
     fmt_a, fmt_b = _TABLE3_FORMATS[dataflow]
-    a_layout = CompressionLayout.from_bitmap(occ_a, (m, k), (bm, bk), fmt_a)
-    b_layout = CompressionLayout.from_bitmap(occ_b, (k, n), (bk, bn), fmt_b)
-    index_plan = _build_index_plan(dataflow, a_layout, b_layout)
+    with obs.span("plan.tables", dataflow=dataflow):
+        a_layout = CompressionLayout.from_bitmap(occ_a, (m, k), (bm, bk),
+                                                 fmt_a)
+        b_layout = CompressionLayout.from_bitmap(occ_b, (k, n), (bk, bn),
+                                                 fmt_b)
+        index_plan = _build_index_plan(dataflow, a_layout, b_layout)
 
     plan = FlexagonPlan(
         dataflow=dataflow,
@@ -649,7 +692,8 @@ def flexagon_plan(a_spec: OperandSpec, b_spec: OperandSpec, *,
         interpret=interpret,
     )
     # "configure the hardware": backend-specific pattern-only schedules
-    plan.aux = backend_obj.prepare(plan)
+    with obs.span("plan.prepare", backend=backend_obj.name):
+        plan.aux = backend_obj.prepare(plan)
     return _maybe_verify(plan, verify)
 
 
@@ -782,11 +826,14 @@ class PlanCache:
                                  tile_dataflows=choices, verify=verify)
             self._plans[key] = plan
             self.builds += 1
+            obs.get_registry().counter("cache.misses").inc()
             if self.maxsize is not None and len(self._plans) > self.maxsize:
                 self._plans.popitem(last=False)
                 self.evictions += 1
+                obs.get_registry().counter("cache.evictions").inc()
         else:
             self.hits += 1
+            obs.get_registry().counter("cache.hits").inc()
             self._plans.move_to_end(key)
         return plan
 

@@ -382,9 +382,11 @@ class AutotunePolicy(SelectionPolicy):
         return choice
 
     def _measure(self, ctx: SelectionContext) -> Tuple[str, Dict[str, float]]:
+        from .. import obs
         from ..api import flexagon_plan  # lazy: api imports this module
 
         self.measurements += 1
+        obs.get_registry().counter("policy.measurements").inc()
         m, k = ctx.shape.m, ctx.shape.k
         n = ctx.shape.n
         bm, bk, bn = ctx.block_shape
@@ -397,19 +399,22 @@ class AutotunePolicy(SelectionPolicy):
             # with a memory budget (or a mesh) the throwaway plan tiles and
             # shards exactly like the real one, so the measurement *is* the
             # tiled / sharded execution
-            plan = flexagon_plan(a, b, dataflow=d,
-                                 block_shape=ctx.block_shape, spec=ctx.spec,
-                                 backend=ctx.backend,
-                                 memory_budget=ctx.memory_budget,
-                                 mesh=ctx.mesh, partition=ctx.partition)
-            a_c, b_c = plan.pack_a(a), plan.pack_b(b)
-            np.asarray(plan.apply(a_c, b_c))        # warmup / compile
-            best = np.inf
-            for _ in range(self.reps):
-                t0 = time.perf_counter()
-                np.asarray(plan.apply(a_c, b_c))    # block until ready
-                best = min(best, time.perf_counter() - t0)
-            timings[d] = best
+            with obs.span("policy.autotune.measure", dataflow=d,
+                          reps=self.reps) as sp:
+                plan = flexagon_plan(a, b, dataflow=d,
+                                     block_shape=ctx.block_shape,
+                                     spec=ctx.spec, backend=ctx.backend,
+                                     memory_budget=ctx.memory_budget,
+                                     mesh=ctx.mesh, partition=ctx.partition)
+                a_c, b_c = plan.pack_a(a), plan.pack_b(b)
+                np.asarray(plan.apply(a_c, b_c))        # warmup / compile
+                best = np.inf
+                for _ in range(self.reps):
+                    t0 = time.perf_counter()  # lint: time-ok (measurement)
+                    np.asarray(plan.apply(a_c, b_c))    # block until ready
+                    best = min(best, time.perf_counter() - t0)  # lint: time-ok
+                timings[d] = best
+                sp.set(best_s=best)
         choice = min(ctx.allowed, key=lambda d: (timings[d], d))
         return choice, timings
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..backends import get_backend
 from ..backends.base import TABLE3_FORMATS
 from ..core import dataflows as df
@@ -224,6 +225,15 @@ class ShardedPlan:
     def apply(self, a, b, out_dtype=jnp.float32) -> jax.Array:
         """Execute C = A @ B across the shards.  jit-compatible, zero host
         work; collective-capable backends run one ``shard_map``."""
+        if obs.enabled():
+            with obs.span("dist.sharded.apply", dataflow=self.dataflow,
+                          shards=self.n_shards, axis=self.axis,
+                          collective=self.collective,
+                          ici_bytes=float(self.ici_bytes)):
+                return self._apply_inner(a, b, out_dtype)
+        return self._apply_inner(a, b, out_dtype)
+
+    def _apply_inner(self, a, b, out_dtype=jnp.float32) -> jax.Array:
         m, k, n = self.shapes
         bm, bk, bn = self.block_shape
         mp, kp, np_ = self.padded_grid
@@ -409,6 +419,7 @@ def plan_sharded(*, dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
     dt = budget.dtype_bytes if budget is not None else 4
     c_bytes = output_bytes(occ_a, occ_b, (bm, bn), dt)
     ici = merge_ici_bytes(part.axis, n_shards, c_bytes)
+    obs.get_registry().gauge("dist.ici_bytes").set(float(ici))
 
     return ShardedPlan(
         dataflow=dataflow, axis=part.axis, n_shards=n_shards, mesh=mesh,

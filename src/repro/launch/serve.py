@@ -6,11 +6,11 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
+from .. import obs
 from ..configs import get_config
 from ..models import build_model
 from ..serve.engine import Request, ServeEngine
@@ -34,19 +34,25 @@ def main(argv=None):
                          max_seq=args.max_seq)
 
     rng = np.random.default_rng(args.seed)
-    t0 = time.time()
+    t0 = obs.now_ns()    # the obs monotonic clock (repro-wide telemetry)
     for rid in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
                               size=int(rng.integers(4, 17))).astype(np.int64)
         engine.submit(Request(rid, prompt, max_new_tokens=args.max_new))
     results = engine.run_to_completion()
-    dt = time.time() - t0
+    dt = (obs.now_ns() - t0) / 1e9
     total_new = sum(len(v) for v in results.values())
     for rid in sorted(results):
         print(f"[serve] req {rid}: {results[rid][:8]}"
               f"{'...' if len(results[rid]) > 8 else ''}")
     print(f"[serve] {len(results)} requests, {total_new} tokens in {dt:.1f}s "
           f"({total_new/dt:.1f} tok/s) stats={engine.stats}")
+    lat = engine.latency_stats()
+    if lat:
+        dec = lat.get("serve.latency.decode_step_s", {})
+        print(f"[serve] decode_step p50 {dec.get('p50', 0) * 1e3:.1f} ms "
+              f"p99 {dec.get('p99', 0) * 1e3:.1f} ms "
+              f"over {dec.get('count', 0)} steps")
     return results
 
 

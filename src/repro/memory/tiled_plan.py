@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..backends import get_backend
 from ..backends.base import TABLE3_FORMATS
 from ..core import dataflows as df
@@ -198,7 +199,12 @@ def mixed_tile_dataflows(occ_a: np.ndarray, occ_b: np.ndarray,
             shape=shape, block_shape=tuple(block_shape), occ_a=occ_at,
             occ_b=occ_bt, fingerprint=f"{fingerprint}/tile{idx}",
             backend=backend, spec=spec, allowed=allowed, tile=tile)
-        choices.append(policy.select_tile(ctx))
+        t_sel = obs.now_ns()
+        with obs.span("plan.select_tile", tile=idx,
+                      policy=type(policy).__name__):
+            choices.append(policy.select_tile(ctx))
+        obs.get_registry().histogram("policy.select_tile_s").observe(
+            (obs.now_ns() - t_sel) / 1e9)
     return tuple(choices)
 
 
@@ -397,8 +403,39 @@ class TiledPlan:
             return x.todense()
         return jnp.asarray(x)
 
+    def _traffic_attrs(self) -> Dict[str, Any]:
+        """Tier-traffic span attributes, computed once per plan.
+
+        Only evaluated when tracing is on (the estimator is host work) and
+        memoized on the plan object so repeated traced applies pay a single
+        estimation.
+        """
+        cached = getattr(self, "_tier_attrs_cache", None)
+        if cached is None:
+            try:
+                from .traffic import plan_traffic
+
+                t = plan_traffic(self).traffic  # lint: host-ok (trace-gated)
+                cached = {"l1_bytes": t.l1_bytes, "l2_bytes": t.l2_bytes,
+                          "dram_bytes": t.dram_bytes,
+                          "merge_bytes": t.merge_bytes}
+                reg = obs.get_registry()
+                for tier in ("l1", "l2", "dram"):
+                    reg.gauge(f"tier.{tier}_bytes").set(cached[f"{tier}_bytes"])
+            except Exception:      # pricing must never break execution
+                cached = {}
+            object.__setattr__(self, "_tier_attrs_cache", cached)
+        return cached
+
     def apply(self, a, b, out_dtype=jnp.float32) -> jax.Array:
         """Execute C = A @ B tile by tile.  jit-compatible, zero host work."""
+        if obs.enabled():
+            with obs.span("memory.tiled.apply", dataflow=self.dataflow,
+                          tiles=self.n_tiles, **self._traffic_attrs()):
+                return self._apply_inner(a, b, out_dtype)
+        return self._apply_inner(a, b, out_dtype)
+
+    def _apply_inner(self, a, b, out_dtype=jnp.float32) -> jax.Array:
         m, k, n = self.shapes
         bm, bk, bn = self.block_shape
         mb = max(t.i1 for t in self.tiles)
@@ -518,7 +555,10 @@ def plan_tiled(*, dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
                            fingerprint=fingerprint, spec=spec, policy=policy,
                            tile_dataflows=tile_dataflows)
 
-    tiles, merge_plan = schedule(dataflow, occ_a, occ_b, block_shape, budget)
+    with obs.span("plan.schedule", dataflow=dataflow) as _sp:
+        tiles, merge_plan = schedule(dataflow, occ_a, occ_b, block_shape,
+                                     budget)
+        _sp.set(tiles=len(tiles))
     if len(tiles) <= 1:
         return None
 
@@ -599,7 +639,10 @@ def _plan_mixed(*, occ_a: np.ndarray, occ_b: np.ndarray,
     there is nothing to mix, the caller degenerates to a policy-chosen
     single-dataflow plan.
     """
-    tiles, merge_plan = schedule("mixed", occ_a, occ_b, block_shape, budget)
+    with obs.span("plan.schedule", dataflow="mixed") as _sp:
+        tiles, merge_plan = schedule("mixed", occ_a, occ_b, block_shape,
+                                     budget)
+        _sp.set(tiles=len(tiles))
     if len(tiles) <= 1:
         return None
     if tile_dataflows is None:

@@ -36,17 +36,30 @@ kernel.  A ``CompressedFFN`` built with a ``mesh=`` runs the fused decode
 whose ``shard_map`` the jitted decode closure traces straight through, and
 ``stats["dist"]`` reports the mesh shape, shard count, and collective-merge
 (ICI) bytes.
+
+Telemetry goes through :mod:`repro.obs`: each engine owns a
+:class:`repro.obs.MetricsRegistry` (``serve.prefills`` / ``decode_steps`` /
+``completed`` counters, ``serve.latency.{queue_s,prefill_s,decode_step_s,
+request_s}`` histograms — summaries via :meth:`ServeEngine.latency_stats`),
+and with ``REPRO_TRACE`` enabled every request emits an admit→complete
+``serve.request`` span whose children (``serve.prefill``, and the
+``plan.phase1`` spans of any admission-time planning) reconstruct the
+request tree in Perfetto.  ``ServeEngine.stats`` is now a snapshot
+*property* over the registry — same keys as the historical dict, but every
+read is an independent deep copy.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..models.moe import MoEPlan, plan_moe
 
 __all__ = ["Request", "ServeEngine"]
@@ -60,6 +73,10 @@ class Request:
     eos_id: Optional[int] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    # obs bookkeeping (admit→complete span + queue/request latency)
+    t_submit_ns: Optional[int] = None
+    t_admit_ns: Optional[int] = None
+    span_id: Optional[int] = None
 
     @property
     def done(self) -> bool:
@@ -92,8 +109,12 @@ class ServeEngine:
         self._queue: deque = deque()
         self._finished: List[Request] = []
         self._positions = np.zeros(slots, np.int64)
-        self.stats = {"prefills": 0, "decode_steps": 0, "completed": 0,
-                      "plan_builds": 0, "plan_hits": 0}
+        # Telemetry lives in a per-engine MetricsRegistry (serve.* counters
+        # + serve.latency.* histograms); ``stats`` is a read-only snapshot
+        # property over it, so two engines in one process never share
+        # counters and callers keep the historical dict shape.
+        self.metrics = obs.MetricsRegistry()
+        self._plan_stats: Dict[str, Any] = {"plan_builds": 0, "plan_hits": 0}
         # phase 1 for the steady state, up front: the fused decode step
         # always runs `slots` tokens, so its plans never change after this
         self.sparse_ffn = sparse_ffn
@@ -113,27 +134,53 @@ class ServeEngine:
         self._decode = jax.jit(decode_model.decode_step)
         self._sync_plan_stats()
 
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Point-in-time telemetry snapshot (historical dict shape).
+
+        Served from the per-engine :class:`repro.obs.MetricsRegistry` plus
+        the last plan-stats sync; every call returns a fresh **deep copy**,
+        so mutating a nested dict on the policy/cache after a snapshot was
+        taken cannot rewrite history (regression-tested in tests/test_serve
+        and tests/test_obs).
+        """
+        m = self.metrics
+        out: Dict[str, Any] = {
+            "prefills": int(m.value("serve.prefills")),
+            "decode_steps": int(m.value("serve.decode_steps")),
+            "completed": int(m.value("serve.completed")),
+        }
+        out.update(copy.deepcopy(self._plan_stats))
+        return out
+
+    def latency_stats(self) -> Dict[str, Dict[str, Any]]:
+        """``serve.latency.*`` histogram summaries (count/p50/p90/p99)."""
+        return self.metrics.snapshot(prefix="serve.latency.")
+
     def _sync_plan_stats(self):
         if self.sparse_ffn is not None:
-            self.stats["plan_builds"] = self.sparse_ffn.plan_builds
-            self.stats["plan_hits"] = self.sparse_ffn.plan_hits
+            ps = self._plan_stats
+            ps["plan_builds"] = self.sparse_ffn.plan_builds
+            ps["plan_hits"] = self.sparse_ffn.plan_hits
             backend = self.sparse_ffn.backend
-            self.stats["backend"] = (backend if isinstance(backend, str)
-                                     else getattr(backend, "name", None)) \
+            ps["backend"] = (backend if isinstance(backend, str)
+                             else getattr(backend, "name", None)) \
                 or "reference"
             # LRU plan-cache behaviour under serving traffic
-            # (hit/miss/eviction counters, DESIGN.md §12)
+            # (hit/miss/eviction counters, DESIGN.md §12).  Deep-copied:
+            # these are live nested dicts owned by the policy/cache and
+            # must not alias into snapshots.
             cache_stats = getattr(self.sparse_ffn, "cache_stats", None)
             if cache_stats is not None:
-                self.stats["plan_cache"] = cache_stats
+                ps["plan_cache"] = copy.deepcopy(cache_stats)
             # selection-policy telemetry (autotune hit/miss/measurement
             # counters, learned fallback counts — DESIGN.md §16)
             pol = getattr(self.sparse_ffn, "policy", None)
             if pol is not None:
                 pol_stats = getattr(pol, "stats", None)
-                self.stats["policy"] = (dict(pol_stats)
-                                        if isinstance(pol_stats, dict)
-                                        else {"name": str(pol)})
+                ps["policy"] = (copy.deepcopy(pol_stats)
+                                if isinstance(pol_stats, dict)
+                                else {"name": str(pol)})
             # sharded fused decode: shard / collective telemetry from the
             # decode-shape plans (DESIGN.md §13)
             entry = self.decode_ffn
@@ -141,17 +188,19 @@ class ServeEngine:
                 dist = [p.dist_stats for p in (entry.plan_in, entry.plan_out)
                         if hasattr(p, "dist_stats")]
                 if dist:
-                    self.stats["dist"] = {
+                    ici = float(sum(d["ici_bytes"] for d in dist))
+                    ps["dist"] = {
                         "mesh_shape": dist[0]["mesh_shape"],
                         "shards": dist[0]["shards"],
                         "collectives": sum(1 for d in dist
                                            if d["collective"] == "psum"),
-                        "ici_bytes": float(sum(d["ici_bytes"]
-                                               for d in dist)),
+                        "ici_bytes": ici,
                     }
+                    obs.get_registry().gauge("dist.ici_bytes").set(ici)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request):
+        req.t_submit_ns = obs.now_ns()
         self._queue.append(req)
         self._admit()
 
@@ -160,6 +209,15 @@ class ServeEngine:
             req = self._queue.popleft()
             slot = self._free.popleft()
             req.slot = slot
+            req.t_admit_ns = obs.now_ns()
+            if req.t_submit_ns is not None:
+                self.metrics.histogram("serve.latency.queue_s").observe(
+                    (req.t_admit_ns - req.t_submit_ns) / 1e9)
+            if obs.enabled():
+                # the admit→complete request span is recorded at completion
+                # (it outlives any `with` block); children parent onto its
+                # pre-allocated id so the tree survives interleaved steps
+                req.span_id = obs.get_tracer().new_id()
             self._prefill_into_slot(req)
             self._active[slot] = req
 
@@ -169,6 +227,7 @@ class ServeEngine:
         Admission is where new shapes appear, so phase 1 for this prompt
         length runs here (cached — repeat lengths are hits, and the decode
         shape was planned at construction)."""
+        t0 = obs.now_ns()
         model = self.model
         if self.sparse_ffn is not None:
             self.sparse_ffn.specialize(len(req.prompt))
@@ -180,7 +239,15 @@ class ServeEngine:
         req.out_tokens.append(next_tok)
         self._write_slot(req.slot, one_cache)
         self._set_pos(req.slot, len(req.prompt))
-        self.stats["prefills"] += 1
+        dur = obs.now_ns() - t0
+        if req.span_id is not None:
+            # child of the request's pre-allocated admit→complete span
+            obs.get_tracer().record(
+                "serve.prefill", t0, dur, parent=req.span_id,
+                attrs={"rid": req.rid, "slot": req.slot,
+                       "prompt_len": len(req.prompt)})
+        self.metrics.counter("serve.prefills").inc()
+        self.metrics.histogram("serve.latency.prefill_s").observe(dur / 1e9)
 
     def _write_slot(self, slot: int, one_cache, replace_full: bool = True):
         """Write every leaf of a batch-1 cache into this slot's cache lines.
@@ -253,20 +320,40 @@ class ServeEngine:
                          replace_full=self.slots == 1)
         self._set_pos(slot, 0)
 
+    def _complete_request(self, req: Request):
+        """Close out a finished request's telemetry (admit→complete)."""
+        t_end = obs.now_ns()
+        if req.t_admit_ns is not None:
+            self.metrics.histogram("serve.latency.request_s").observe(
+                (t_end - req.t_admit_ns) / 1e9)
+        if req.span_id is not None:
+            # the root of this request's span tree: serve.prefill (and any
+            # plan.* spans under it) recorded with parent=req.span_id
+            obs.get_tracer().record(
+                "serve.request", req.t_admit_ns, t_end - req.t_admit_ns,
+                sid=req.span_id,
+                attrs={"rid": req.rid, "slot": req.slot,
+                       "prompt_len": len(req.prompt),
+                       "new_tokens": len(req.out_tokens)})
+
     # -- decode loop -----------------------------------------------------------
     def step(self) -> List[Tuple[int, int]]:
         """One fused decode for all active slots; returns (rid, token) pairs."""
         if not self._active:
             return []
+        t0 = obs.now_ns()
         toks = np.zeros((self.slots, 1), np.int32)
         for slot, req in self._active.items():
             toks[slot, 0] = req.out_tokens[-1]
         # per-slot positions (vector pos in the cache): mixed-progress slots
         # decode correctly in one fused step — continuous batching
-        logits, cache = self._decode(self.params, self.cache,
-                                     jnp.asarray(toks))
+        with obs.span("serve.decode_step", active=len(self._active)):
+            logits, cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(toks))
         self.cache = cache
-        self.stats["decode_steps"] += 1
+        self.metrics.counter("serve.decode_steps").inc()
+        self.metrics.histogram("serve.latency.decode_step_s").observe(
+            (obs.now_ns() - t0) / 1e9)
         out = []
         finished = []
         for slot, req in list(self._active.items()):
@@ -277,8 +364,10 @@ class ServeEngine:
             if req.done:
                 finished.append(slot)
         for slot in finished:
-            self.stats["completed"] += 1
-            self._finished.append(self._active[slot])
+            self.metrics.counter("serve.completed").inc()
+            req = self._active[slot]
+            self._complete_request(req)
+            self._finished.append(req)
             del self._active[slot]
             self._free.append(slot)
             self._reset_slot(slot)

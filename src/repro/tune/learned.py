@@ -28,6 +28,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..backends.policies import HeuristicPolicy, SelectionPolicy
 from ..core import dataflows as df
 from .features import FEATURE_NAMES, N_FEATURES, context_features
@@ -418,10 +419,12 @@ class LearnedPolicy(SelectionPolicy):
         self.selections += 1
         if ctx.memory_budget is not None:
             self.budget_fallbacks += 1
+            obs.get_registry().counter("policy.learned_fallbacks").inc()
             return self.fallback.select(ctx)
         choice = self._predict(ctx)
         if choice is None:
             self.fallbacks += 1
+            obs.get_registry().counter("policy.learned_fallbacks").inc()
             return self.fallback.select(ctx)
         return choice
 
@@ -430,6 +433,7 @@ class LearnedPolicy(SelectionPolicy):
         choice = self._predict(ctx)
         if choice is None:
             self.fallbacks += 1
+            obs.get_registry().counter("policy.learned_fallbacks").inc()
             return self.fallback.select_tile(ctx)
         return choice
 

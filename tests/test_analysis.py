@@ -366,6 +366,60 @@ def test_lint_pragma_suppresses_and_cuts_edge(tmp_path):
     assert lint_paths([str(mod)]) == []
 
 
+def _repro_file(tmp_path, name, text):
+    """A module that lives under a ``repro/`` path — obs-rule scope."""
+    d = tmp_path / "repro" / "subsys"
+    d.mkdir(parents=True, exist_ok=True)
+    f = d / name
+    f.write_text(text)
+    return str(f)
+
+
+def test_lint_obs_time_flags_direct_clock_calls(tmp_path):
+    bad = _repro_file(tmp_path, "clocky.py",
+                      "import time\n\n\n"
+                      "def work():\n"
+                      "    t0 = time.time()\n"
+                      "    t1 = time.perf_counter()\n"
+                      "    return t1 - t0\n")
+    diags = lint_paths([bad])
+    assert _codes(diags).count("obs-time") == 2
+    assert all(d.is_error for d in diags if d.code == "obs-time")
+
+
+def test_lint_obs_time_pragma_and_scope(tmp_path):
+    # a deliberate measurement loop opts out per line
+    ok = _repro_file(tmp_path, "measured.py",
+                     "import time\n\n\n"
+                     "def measure():\n"
+                     "    return time.perf_counter()  # lint: time-ok\n")
+    assert "obs-time" not in _codes(lint_paths([ok]))
+    # the obs layer itself is allowlisted (it IS the clock)
+    obs_dir = tmp_path / "repro" / "obs"
+    obs_dir.mkdir(parents=True)
+    inner = obs_dir / "trace.py"
+    inner.write_text("import time\nnow = time.perf_counter_ns()\n")
+    assert lint_paths([str(inner)]) == []
+    # outside repro/ (benchmarks, tests) the rule never fires
+    outside = tmp_path / "bench.py"
+    outside.write_text("import time\nt = time.time()\n")
+    assert "obs-time" not in _codes(lint_paths([str(outside)]))
+
+
+def test_lint_obs_stats_flags_string_keyed_accumulation(tmp_path):
+    mod = _repro_file(tmp_path, "statsy.py",
+                      "def tick(self):\n"
+                      "    self.stats['hits'] += 1\n"
+                      "    self.stats[0] += 1\n"
+                      "    self.stats['ok'] += 1  # lint: stats-ok\n")
+    diags = [d for d in lint_paths([mod]) if d.code == "obs-stats"]
+    # only the unsuppressed string-keyed line: integer subscripts are list
+    # accumulators (core/mrn.py), not metrics drift
+    assert len(diags) == 1
+    assert ":2" in diags[0].location
+    assert not diags[0].is_error        # warning, not a gate failure
+
+
 def test_lint_clean_on_shipped_tree():
     """The shipped src/ tree must lint clean — same gate as CI."""
     root = Path(__file__).resolve().parents[1]
