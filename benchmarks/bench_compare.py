@@ -1,0 +1,80 @@
+"""Compare two ``kernels_bench --json`` snapshots and fail on regressions.
+
+The CI ``bench-regress`` lane runs the quick bench against the committed
+``BENCH_kernels.json`` and fails the build when any ``plan_apply`` row —
+the steady-state number a serving loop pays — regresses more than the
+threshold (default 25%).  Wall-clock on shared CI boxes is noisy, hence
+the generous threshold; the committed snapshot (refreshed deliberately,
+with the perf-trajectory story in the PR) is the baseline, not the
+previous CI run.
+
+Usage::
+
+    python -m benchmarks.bench_compare BENCH_kernels.json new.json \
+        [--suffix plan_apply] [--threshold 1.25]
+
+Exit status 1 on any regression; rows present in only one snapshot are
+reported but never fail the run (quick mode covers a subset of cases).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str, suffix: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"])
+            for r in payload.get("rows", [])
+            if r["name"].endswith(f"/{suffix}")}
+
+
+def compare(baseline: dict, current: dict, threshold: float) -> list[str]:
+    """Return one message per regressed row (empty = pass)."""
+    failures = []
+    for name in sorted(baseline):
+        if name not in current:
+            print(f"  skip {name}: missing from current snapshot")
+            continue
+        old, new = baseline[name], current[name]
+        ratio = new / old if old > 0 else float("inf")
+        status = "FAIL" if ratio > threshold else "ok"
+        print(f"  {status:4s} {name}: {old:.0f}us -> {new:.0f}us "
+              f"({ratio:.2f}x)")
+        if ratio > threshold:
+            failures.append(
+                f"{name} regressed {ratio:.2f}x (> {threshold:.2f}x): "
+                f"{old:.0f}us -> {new:.0f}us")
+    for name in sorted(set(current) - set(baseline)):
+        print(f"  new  {name}: {current[name]:.0f}us (no baseline)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed snapshot (e.g. "
+                                     "BENCH_kernels.json)")
+    ap.add_argument("current", help="freshly produced snapshot")
+    ap.add_argument("--suffix", default="plan_apply",
+                    help="row-name suffix to compare (default: plan_apply)")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="max allowed new/old ratio (default: 1.25)")
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline, args.suffix)
+    current = load_rows(args.current, args.suffix)
+    if not baseline:
+        sys.exit(f"no */{args.suffix} rows in {args.baseline}")
+    print(f"comparing {len(baseline)} {args.suffix} rows "
+          f"(threshold {args.threshold:.2f}x):")
+    failures = compare(baseline, current, args.threshold)
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        sys.exit(1)
+    print("no regressions")
+
+
+if __name__ == "__main__":
+    main()

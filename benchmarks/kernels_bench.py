@@ -20,8 +20,10 @@ Each (dataflow, backend) row also records the *memory behaviour* of the
 operation under the paper's Table 5 on-chip budget (``repro.memory``):
 estimated on-chip bytes (L1 + L2), off-chip bytes, and how many tiles the
 dataflow's scheduler needs — so BENCH_kernels.json tracks traffic, not just
-latency.  A ``tile_dataflows`` field carries the case's mixed-mode per-tile
-dataflow histogram (DESIGN.md §14) so heterogeneity trends are visible.  Rows additionally carry the *distributed* trajectory
+latency.  Each row's ``tile_dataflows`` field is *that plan's own* per-tile
+dataflow histogram; the case's mixed-mode histogram (DESIGN.md §14) gets a
+dedicated ``mixed_tiles`` row so heterogeneity trends stay visible without
+mislabeling single-dataflow rows.  Rows additionally carry the *distributed* trajectory
 (``repro.dist``): the virtual mesh shape, shard count, and interconnect
 (ICI) bytes of the dataflow's partition strategy over ``DIST_SHARDS``
 shards — nonzero for OP k-slabs, whose partial sums all-reduce across the
@@ -104,9 +106,15 @@ def run(quick: bool = False, verify: bool = False) -> list[Row]:
             for df in dataflows
         }
         # the mixed-mode trajectory (DESIGN.md §14): per-tile dataflow
-        # histogram of the case's mixed schedule under the same budget
+        # histogram of the case's mixed schedule under the same budget —
+        # reported on its own row (it describes the *mixed* schedule, not
+        # any single-dataflow plan's tiles)
         mixed_hist = dict(Counter(
             mixed_tile_choices(occ_a, occ_b, BS, PAPER_BUDGET)))
+        rows.append(Row(
+            f"kernels/{name}/mixed_tiles", 0.0,
+            " ".join(f"{d}={c}" for d, c in sorted(mixed_hist.items())),
+            extra={"tile_dataflows": mixed_hist}))
         for backend in BACKENDS:
             # per-dataflow correctness + latency through the registry
             for df in dataflows:
@@ -128,7 +136,11 @@ def run(quick: bool = False, verify: bool = False) -> list[Row]:
                            "mesh_shape": [DIST_SHARDS],
                            "shards": DIST_SHARDS,
                            "ici_bytes": d.ici_bytes,
-                           "tile_dataflows": mixed_hist}))
+                           # this row's own plan: a fixed-dataflow plan's
+                           # tiles all run its dataflow (untiled -> one)
+                           "tile_dataflows":
+                               getattr(plan, "tile_histogram", None)
+                               or {df: 1}}))
 
             # phase split: plan once (build) vs execute many (apply) vs the
             # seed-equivalent per-call path that pays both every time

@@ -3,6 +3,9 @@
 1. Build two sparse matrices, run C = A @ B through all six SpMSpM dataflows
    on both execution backends — `reference` (pure JAX) and `pallas` (TPU
    kernels, interpret mode on CPU) — everyone agrees with the dense oracle.
+   `backend="pallas"` is the *fast path*: two fused streaming kernels over a
+   shared StreamSchedule work list, jit-cached so even an unjitted serving
+   loop replays compiled executables (DESIGN.md §18).
 2. Plan once with the phase-1 mapper/compiler (`flexagon_plan`), execute many
    — including under `jax.jit` — swap selection policies (heuristic vs the
    cycle-level simulator), and chain layers with `FlexagonPipeline`.

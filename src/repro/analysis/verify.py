@@ -265,6 +265,15 @@ def _verify_flexagon(plan: FlexagonPlan, diags, loc, *,
                   f"backend {be.name!r} does not admit {plan.dataflow!r} at "
                   f"block_shape={tuple(plan.block_shape)} "
                   f"(allowed: {allowed})", loc)
+        # compiled-path alignment: backends that compile kernels (pallas
+        # with interpret=False resolving) surface their hardware tiling
+        # rule here as a typed diagnostic instead of a Mosaic crash at
+        # execute time
+        align = getattr(be, "alignment_diagnostic", None)
+        if align is not None:
+            msg = align(plan)
+            if msg:
+                _diag(diags, "block-alignment", ERROR, msg, loc)
 
     if toplevel:
         # cache-key ↔ plan-content agreement: the fingerprint the PlanCache

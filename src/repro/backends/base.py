@@ -88,10 +88,12 @@ class ExecutionBackend(abc.ABC):
 
     #: Can :class:`repro.memory.TiledPlan` stream OP k-slabs through one
     #: ``jax.lax.scan`` on this backend?  Requires ``execute`` to accept
-    #: *traced* plan leaves (index plans / layouts as scan-carried values);
-    #: backends whose phase-2 consumes concrete host-side schedules (e.g.
-    #: Pallas grid construction) leave this ``False`` and get the unrolled
-    #: tile loop instead.
+    #: *traced* plan leaves (index plans / layouts / aux schedules as
+    #: scan-carried values): only array shapes may steer control flow or
+    #: kernel grids.  Both ``reference`` and ``pallas`` qualify (the pallas
+    #: kernels take a shape-uniform :class:`repro.kernels.StreamSchedule`);
+    #: a backend whose phase 2 needs per-tile concrete host schedules
+    #: leaves this ``False`` and gets the unrolled tile loop instead.
     scan_streaming: bool = False
 
     #: Can :class:`repro.dist.ShardedPlan` run this backend's ``execute``
@@ -120,6 +122,30 @@ class ExecutionBackend(abc.ABC):
         depend only on the plan's sparsity *patterns*, never on values.
         """
         del plan
+        return {}
+
+    def uniform_aux(self, plans) -> None:
+        """Make sibling plans' aux schedules shape-uniform so they stack.
+
+        Called (host-side, phase 1) on a group of prepared sub-plans that
+        are about to be stacked into one slab/shard pytree axis
+        (``TiledPlan`` scan lanes, ``ShardedPlan`` shard stacks).  A
+        backend whose aux arrays are work-list sized overrides this to pad
+        them to shared extents *in place* (mutating each ``plan.aux``);
+        the default is a no-op for backends whose aux is already uniform
+        (or empty, like ``reference``).
+        """
+        del plans
+
+    def tuning_knobs(self) -> Dict[str, Tuple[Any, ...]]:
+        """Declare this backend's tunable execution knobs.
+
+        Maps attribute name -> candidate values.  ``AutotunePolicy`` sweeps
+        the cross product jointly with the dataflow choice, applies the
+        winning values to the backend instance, and persists them in the
+        shared :class:`repro.tune.TuneDB` so one process's sweep serves the
+        fleet.  Default: no knobs.
+        """
         return {}
 
     @abc.abstractmethod

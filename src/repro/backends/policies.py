@@ -29,6 +29,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import hashlib
+import itertools
 import os
 import time
 from collections import OrderedDict
@@ -299,6 +300,15 @@ class AutotunePolicy(SelectionPolicy):
     a second process (or a restarted server) starts hot — its first select
     on a known pattern is a cold-start disk hit, not a sweep
     (``db_hits``; asserted in tests/test_tune.py).
+
+    Backends may declare **tuning knobs**
+    (:meth:`repro.backends.ExecutionBackend.tuning_knobs`, e.g. the pallas
+    dense-escape threshold): the sweep then measures the (dataflow × knob)
+    cross product jointly, applies the winning knob values to the backend
+    instance before the real plan is built, and persists them alongside
+    the choice — a DB hit in another process re-applies them without
+    measuring.  :meth:`select_block` runs the same measure-once-share-
+    everywhere discipline over candidate kernel *block shapes*.
     """
 
     name = "autotune"
@@ -309,7 +319,7 @@ class AutotunePolicy(SelectionPolicy):
             raise ValueError(f"maxsize must be >= 1 or None, got {maxsize}")
         self.reps = reps
         self.maxsize = maxsize
-        self._cache: "OrderedDict[tuple, str]" = OrderedDict()
+        self._cache: "OrderedDict[tuple, Any]" = OrderedDict()
         self.measurements = 0      # sweep count, for tests/telemetry
         self.hits = 0              # in-memory LRU hits
         self.misses = 0
@@ -344,12 +354,17 @@ class AutotunePolicy(SelectionPolicy):
                       mesh_key=mesh_key(ctx.mesh), partition=ctx.partition,
                       accel=getattr(ctx.backend, "cfg", None))
 
-    def _remember(self, key: tuple, choice: str) -> None:
-        self._cache[key] = choice
+    def _remember(self, key: tuple, value: Any) -> None:
+        self._cache[key] = value
         self._cache.move_to_end(key)
         if self.maxsize is not None and len(self._cache) > self.maxsize:
             self._cache.popitem(last=False)
             self.evictions += 1
+
+    @staticmethod
+    def _apply_knobs(backend, knobs: Dict[str, Any]) -> None:
+        for attr, value in (knobs or {}).items():
+            setattr(backend, attr, value)
 
     def select(self, ctx: SelectionContext) -> str:
         from ..dist.partition import mesh_key   # lazy: dist uses api
@@ -357,36 +372,36 @@ class AutotunePolicy(SelectionPolicy):
         key = (ctx.fingerprint, ctx.backend.name, ctx.block_shape,
                ctx.memory_budget, mesh_key(ctx.mesh), ctx.partition)
         hit = self._cache.get(key)
-        if hit is not None and hit in ctx.allowed:
+        if hit is not None and hit[0] in ctx.allowed:
             self.hits += 1
             self._cache.move_to_end(key)
-            return hit
+            self._apply_knobs(ctx.backend, hit[1])
+            return hit[0]
         self.misses += 1
         if self.db is not None:
             rec = self.db.get(self._db_key(ctx))
             if rec is not None and rec.get("choice") in ctx.allowed:
                 self.db_hits += 1
-                self._remember(key, rec["choice"])
+                knobs = dict(rec.get("knobs") or {})
+                self._remember(key, (rec["choice"], knobs))
+                self._apply_knobs(ctx.backend, knobs)
                 return rec["choice"]
-        choice, timings = self._measure(ctx)
-        self._remember(key, choice)
+        choice, knobs, timings = self._measure(ctx)
+        self._remember(key, (choice, knobs))
         if self.db is not None:
             self.db.put(self._db_key(ctx), {
                 "choice": choice,
+                "knobs": knobs,
                 "timings_s": timings,
                 "fingerprint": ctx.fingerprint,
                 "backend": ctx.backend.name,
                 "block_shape": list(ctx.block_shape),
                 "reps": self.reps,
             })
+        self._apply_knobs(ctx.backend, knobs)
         return choice
 
-    def _measure(self, ctx: SelectionContext) -> Tuple[str, Dict[str, float]]:
-        from .. import obs
-        from ..api import flexagon_plan  # lazy: api imports this module
-
-        self.measurements += 1
-        obs.get_registry().counter("policy.measurements").inc()
+    def _synth_operands(self, ctx: SelectionContext):
         m, k = ctx.shape.m, ctx.shape.k
         n = ctx.shape.n
         bm, bk, bn = ctx.block_shape
@@ -394,29 +409,126 @@ class AutotunePolicy(SelectionPolicy):
         rng = np.random.default_rng(seed)
         a = _values_on_pattern(rng, ctx.occ_a, (m, k), (bm, bk))
         b = _values_on_pattern(rng, ctx.occ_b, (k, n), (bk, bn))
-        timings = {}
-        for d in ctx.allowed:
-            # with a memory budget (or a mesh) the throwaway plan tiles and
-            # shards exactly like the real one, so the measurement *is* the
-            # tiled / sharded execution
-            with obs.span("policy.autotune.measure", dataflow=d,
-                          reps=self.reps) as sp:
-                plan = flexagon_plan(a, b, dataflow=d,
-                                     block_shape=ctx.block_shape,
-                                     spec=ctx.spec, backend=ctx.backend,
+        return a, b
+
+    def _time_plan(self, plan, a, b) -> float:
+        a_c, b_c = plan.pack_a(a), plan.pack_b(b)
+        np.asarray(plan.apply(a_c, b_c))            # warmup / compile
+        best = np.inf
+        for _ in range(self.reps):
+            t0 = time.perf_counter()  # lint: time-ok (measurement)
+            np.asarray(plan.apply(a_c, b_c))        # block until ready
+            best = min(best, time.perf_counter() - t0)  # lint: time-ok
+        return best
+
+    def _measure(self, ctx: SelectionContext
+                 ) -> Tuple[str, Dict[str, Any], Dict[str, float]]:
+        from .. import obs
+        from ..api import flexagon_plan  # lazy: api imports this module
+
+        self.measurements += 1
+        obs.get_registry().counter("policy.measurements").inc()
+        a, b = self._synth_operands(ctx)
+        # joint (dataflow x backend-knob) sweep: backends with declared
+        # tuning knobs get each knob combination measured per dataflow
+        knob_space = getattr(ctx.backend, "tuning_knobs", dict)() or {}
+        names = sorted(knob_space)
+        combos = [dict(zip(names, vals))
+                  for vals in itertools.product(*(knob_space[nm]
+                                                  for nm in names))] or [{}]
+        saved = {nm: getattr(ctx.backend, nm) for nm in names}
+        timings: Dict[str, float] = {}
+        scored: Dict[Tuple[str, int], float] = {}
+        try:
+            for ci, combo in enumerate(combos):
+                self._apply_knobs(ctx.backend, combo)
+                tag = ",".join(f"{nm}={combo[nm]}" for nm in names)
+                for d in ctx.allowed:
+                    # with a memory budget (or a mesh) the throwaway plan
+                    # tiles and shards exactly like the real one, so the
+                    # measurement *is* the tiled / sharded execution
+                    with obs.span("policy.autotune.measure", dataflow=d,
+                                  reps=self.reps) as sp:
+                        plan = flexagon_plan(
+                            a, b, dataflow=d, block_shape=ctx.block_shape,
+                            spec=ctx.spec, backend=ctx.backend,
+                            memory_budget=ctx.memory_budget,
+                            mesh=ctx.mesh, partition=ctx.partition)
+                        best = self._time_plan(plan, a, b)
+                        scored[(d, ci)] = best
+                        timings[f"{d}|{tag}" if tag else d] = best
+                        sp.set(best_s=best)
+        finally:
+            self._apply_knobs(ctx.backend, saved)
+        choice, ci = min(scored, key=lambda dc: (scored[dc], dc))
+        return choice, combos[ci], timings
+
+    def select_block(self, ctx: SelectionContext,
+                     candidates: Tuple[Tuple[int, int, int], ...]
+                     ) -> Tuple[int, int, int]:
+        """Measure candidate kernel block shapes for this pattern.
+
+        The block-shape analogue of :meth:`select`: synthesizes values on
+        the pattern, builds one (policy-default dataflow) plan per
+        candidate block shape on the target backend, times ``apply``, and
+        returns the fastest — cached in the same LRU and persisted under a
+        ``block:``-prefixed TuneDB key so the sweep runs once per
+        fingerprint across processes.
+        """
+        from .. import obs
+        from ..api import flexagon_plan  # lazy: api imports this module
+        from ..dist.partition import mesh_key   # lazy: dist uses api
+        from ..tune.db import db_key            # lazy: tune imports us
+
+        candidates = tuple(tuple(c) for c in candidates)
+        if not candidates:
+            raise ValueError("select_block needs at least one candidate")
+        key = ("block", ctx.fingerprint, ctx.backend.name, candidates,
+               ctx.memory_budget, mesh_key(ctx.mesh), ctx.partition)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._cache.move_to_end(key)
+            return hit
+        self.misses += 1
+        dbk = db_key(f"block:{ctx.fingerprint}", ctx.backend.name,
+                     ctx.block_shape, memory_budget=ctx.memory_budget,
+                     mesh_key=mesh_key(ctx.mesh), partition=ctx.partition,
+                     accel=getattr(ctx.backend, "cfg", None))
+        if self.db is not None:
+            rec = self.db.get(dbk)
+            best = tuple(rec["block_shape"]) if rec else None
+            if best in candidates:
+                self.db_hits += 1
+                self._remember(key, best)
+                return best
+        self.measurements += 1
+        obs.get_registry().counter("policy.measurements").inc()
+        a, b = self._synth_operands(ctx)
+        timings: Dict[str, float] = {}
+        for cand in candidates:
+            with obs.span("policy.autotune.measure_block",
+                          block=str(cand), reps=self.reps) as sp:
+                plan = flexagon_plan(a, b, block_shape=cand, spec=ctx.spec,
+                                     backend=ctx.backend,
                                      memory_budget=ctx.memory_budget,
                                      mesh=ctx.mesh, partition=ctx.partition)
-                a_c, b_c = plan.pack_a(a), plan.pack_b(b)
-                np.asarray(plan.apply(a_c, b_c))        # warmup / compile
-                best = np.inf
-                for _ in range(self.reps):
-                    t0 = time.perf_counter()  # lint: time-ok (measurement)
-                    np.asarray(plan.apply(a_c, b_c))    # block until ready
-                    best = min(best, time.perf_counter() - t0)  # lint: time-ok
-                timings[d] = best
-                sp.set(best_s=best)
-        choice = min(ctx.allowed, key=lambda d: (timings[d], d))
-        return choice, timings
+                t = self._time_plan(plan, a, b)
+                timings["x".join(map(str, cand))] = t
+                sp.set(best_s=t)
+        best = min(candidates,
+                   key=lambda c: (timings["x".join(map(str, c))], c))
+        self._remember(key, best)
+        if self.db is not None:
+            self.db.put(dbk, {
+                "choice": "x".join(map(str, best)),
+                "block_shape": list(best),
+                "timings_s": timings,
+                "fingerprint": ctx.fingerprint,
+                "backend": ctx.backend.name,
+                "reps": self.reps,
+            })
+        return best
 
     def layer_cost(self, shape: LayerShape, dataflow: str,
                    spec: Optional[TPUSpec] = None,

@@ -15,9 +15,11 @@ placement), and ``ShardedPlan.apply`` runs them all:
   and OP k-slab partitions merge their partial sums with one
   ``jax.lax.psum`` (the MRN's merge phase lifted to the interconnect — the
   top tier of the merge hierarchy);
-- otherwise (e.g. the Pallas backend, whose phase 2 consumes concrete
-  host-side grids) the shards unroll into a sequential loop with the same
-  combine — numerically identical, still jit-compatible.
+- otherwise (a backend without ``collective_merge`` — both ``reference``
+  and ``pallas`` declare it; the pallas kernels consume shape-uniform
+  ``StreamSchedule`` work lists, so stacked shard members trace cleanly)
+  the shards unroll into a sequential loop with the same combine —
+  numerically identical, still jit-compatible.
 
 The containment hierarchy stays clean: ``ShardedPlan → TiledPlan →
 FlexagonPlan``, every level exposing the same ``apply`` surface.
@@ -415,6 +417,9 @@ def plan_sharded(*, dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
     for p in plans:
         if isinstance(p, FlexagonPlan) and p.aux is None:
             p.aux = backend.prepare(p)
+    if shard_ok:
+        # backend aux schedules must stack too (shape-uniform per shard)
+        backend.uniform_aux(plans)
 
     dt = budget.dtype_bytes if budget is not None else 4
     c_bytes = output_bytes(occ_a, occ_b, (bm, bn), dt)

@@ -1,10 +1,11 @@
 """Pallas TPU kernels for the performance hot spots.
 
 - ``ip_spmm`` / ``op_spmm`` / ``gust_spmm`` — the three SpMSpM dataflows on
-  one substrate (``common.py`` = MRN analogue), validated in interpret mode.
-  Plan-level dispatch lives in :mod:`repro.backends.pallas` (the ``pallas``
-  execution backend), which also builds their phase-1 schedules
-  (``GustTables``, ``MergePlan``) once per pattern; interpret-mode defaults
+  one substrate (``stream.py``: a shared :class:`StreamSchedule` work list
+  driving two fused streaming kernels, DESIGN.md §18), validated in
+  interpret mode.  Plan-level dispatch lives in
+  :mod:`repro.backends.pallas` (the ``pallas`` execution backend), which
+  builds the phase-1 schedules once per pattern; interpret-mode defaults
   resolve through :mod:`repro.config` (``REPRO_INTERPRET``).
 - ``moe_gmm.gmm`` — grouped matmul (Gustavson-as-deployed for MoE).
 - ``ops.flexagon_spmm`` — deprecated one-shot shim (warns); the plan-once
@@ -12,8 +13,16 @@
 - ``ref.py`` — pure-jnp oracles.
 """
 from .ip_spmm import ip_spmm          # noqa: F401
-from .op_spmm import op_spmm, merge_psums, MergePlan, build_merge_plan  # noqa: F401
-from .gust_spmm import gust_spmm, GustTables, build_gust_tables  # noqa: F401
+from .op_spmm import op_spmm          # noqa: F401
+from .gust_spmm import gust_spmm      # noqa: F401
+from .stream import (  # noqa: F401
+    StreamSchedule,
+    pad_schedule,
+    schedule_from_ip,
+    schedule_from_stream,
+    stream_panel_spmm,
+    stream_spmm,
+)
 from .moe_gmm import gmm, pad_groups  # noqa: F401
 from .ops import flexagon_spmm, spmm_with_dataflow  # noqa: F401
 from .ref import spmm_ref, gmm_ref    # noqa: F401

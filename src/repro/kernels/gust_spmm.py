@@ -2,186 +2,55 @@
 
 TPU realization of the paper's Gust dataflow (§3.2.3):
 
-- the **output row panel is stationary**: one `(bm, N)` fp32 accumulator lives
-  in VMEM for the whole row stripe — GAMMA's fiber-cache / the PSRAM row made
-  explicit as scratch;
+- the **output row panel is stationary**: one ``(bm, N)`` fp32 accumulator
+  lives in VMEM for the whole row stripe — GAMMA's fiber-cache / the PSRAM
+  row made explicit as scratch;
 - **leader-follower intersection**: each nonzero element of A's row fiber
-  (the leader) gathers B's entire matching row fiber (the follower) through
-  scalar-prefetched fiber tables — no alignment hardware needed, exactly the
-  paper's argument for Gust;
+  (the leader) gathers B's entire matching row fiber (the follower); the
+  effectual pairs are enumerated at plan time into an i-major work list,
+  so no alignment hardware is needed — exactly the paper's argument for
+  Gust — and, unlike the old ``(Mb, Amax, Fmax)`` rectangular grid, the
+  kernel grid is the work list itself: fiber-length padding costs zero
+  steps;
 - psums merge *immediately* into the current fiber (accumulate at the
-  followed block's column offset), so C is written once and no psum traffic
-  leaves the chip while a row is in flight.
+  follower's column offset via
+  :func:`repro.kernels.stream.stream_panel_spmm`), so C is written once
+  and no psum traffic leaves the chip while a row is in flight.
 
-Grid: ``(Mb, Amax, Fmax)`` — row stripes × padded A-fiber length × padded
-B-fiber length.  VMEM bound: ``bm × N × 4`` bytes must fit (for bm=128 that is
-N ≤ ~64k per 32 MiB of scratch budget); larger N would add an N-tiling level.
+VMEM bound: ``bm × N × 4`` bytes must fit (for bm=128 that is N ≤ ~64k per
+32 MiB of scratch budget); larger N would add an N-tiling level.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-import dataclasses
 
 from ..config import resolve_interpret
+from ..core.dataflows import StreamPlan, build_gust_plan
 from ..core.formats import BlockCSR
-from .common import compiler_params, grid_spec
+from .stream import StreamSchedule, schedule_from_stream, stream_panel_spmm
 
-__all__ = ["gust_spmm", "GustTables", "build_gust_tables"]
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class GustTables:
-    """Padded-rectangular fiber tables for scalar prefetch (phase-1 output).
-
-    Depends only on the operands' sparsity *patterns*, so a plan can build it
-    once and reuse it for every execution with the same structure.
-    """
-
-    a_slots: np.ndarray   # (Mb*amax,)
-    a_cols: np.ndarray
-    a_len: np.ndarray     # (Mb,)
-    b_slots: np.ndarray   # (Kb*fmax,)
-    b_cols: np.ndarray
-    b_len: np.ndarray     # (Kb,)
-    amax: int
-    fmax: int
-
-    def tree_flatten(self):
-        return ((self.a_slots, self.a_cols, self.a_len,
-                 self.b_slots, self.b_cols, self.b_len),
-                (self.amax, self.fmax))
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+__all__ = ["gust_spmm"]
 
 
-def build_gust_tables(a: BlockCSR, b: BlockCSR) -> GustTables:
-    """Host-side fiber-table construction for the Gust kernel (plan time)."""
-    mb, kb = a.grid
-    a_indptr = np.asarray(a.indptr)
-    a_indices = np.asarray(a.indices)
-    b_indptr = np.asarray(b.indptr)
-    b_indices = np.asarray(b.indices)
-
-    a_len = np.diff(a_indptr).astype(np.int32)            # (Mb,)
-    b_len = np.diff(b_indptr).astype(np.int32)            # (Kb,)
-    amax = max(1, int(a_len.max())) if a_len.size else 1
-    fmax = max(1, int(b_len.max())) if b_len.size else 1
-
-    # Fiber tables, padded rectangular for scalar prefetch.  Padded entries
-    # point at slot 0 (a real block) and are masked out by the length gates.
-    a_slots = np.zeros((mb, amax), np.int32)
-    a_cols = np.zeros((mb, amax), np.int32)
-    for i in range(mb):
-        lo, hi = a_indptr[i], a_indptr[i + 1]
-        a_slots[i, : hi - lo] = np.arange(lo, hi)
-        a_cols[i, : hi - lo] = a_indices[lo:hi]
-    b_slots = np.zeros((kb, fmax), np.int32)
-    b_cols = np.zeros((kb, fmax), np.int32)
-    for k in range(kb):
-        lo, hi = b_indptr[k], b_indptr[k + 1]
-        b_slots[k, : hi - lo] = np.arange(lo, hi)
-        b_cols[k, : hi - lo] = b_indices[lo:hi]
-    return GustTables(a_slots.reshape(-1), a_cols.reshape(-1), a_len,
-                      b_slots.reshape(-1), b_cols.reshape(-1), b_len,
-                      amax, fmax)
-
-
-def _kernel(a_slots_ref, a_cols_ref, a_len_ref, b_slots_ref, b_cols_ref,
-            b_len_ref, a_ref, b_ref, o_ref, acc_ref,
-            *, amax: int, fmax: int, bn: int):
-    i, a, f = pl.program_id(0), pl.program_id(1), pl.program_id(2)
-
-    @pl.when((a == 0) & (f == 0))
-    def _():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    k = a_cols_ref[i * amax + a]
-    valid = (a < a_len_ref[i]) & (f < b_len_ref[k])
-
-    @pl.when(valid)
-    def _():
-        j = b_cols_ref[k * fmax + f]
-        psum = jnp.dot(a_ref[0], b_ref[0],
-                       preferred_element_type=jnp.float32)
-        # merge into the current output fiber at the follower's coordinate
-        acc_ref[:, pl.ds(j * bn, bn)] += psum
-
-    @pl.when((a == amax - 1) & (f == fmax - 1))
-    def _():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
-
-
-def gust_spmm(a: BlockCSR, b: BlockCSR, tables: GustTables | None = None, *,
-              out_dtype=jnp.float32, interpret: bool | None = None
-              ) -> jax.Array:
+def gust_spmm(a: BlockCSR, b: BlockCSR, plan: StreamPlan | None = None, *,
+              schedule: StreamSchedule | None = None, out_dtype=jnp.float32,
+              interpret: bool | None = None) -> jax.Array:
     """C = A @ B via Gustavson's dataflow.  Returns dense C (M, N).
 
-    ``tables`` (from :func:`build_gust_tables`) carries the phase-1 fiber
-    tables; omitted, they are rebuilt host-side from the operand structure.
+    ``schedule`` (from :func:`repro.kernels.stream.schedule_from_stream`
+    with ``by_dest=False``) carries the phase-1 i-major work list;
+    omitted, it is rebuilt host-side from the operand structure.
     ``interpret=None`` defers to the global knob (``REPRO_INTERPRET``).
     """
     interpret = resolve_interpret(interpret)
-    mb, kb = a.grid
-    kb2, nb = b.grid
-    assert kb == kb2
-    bm, bk = a.block_shape
-    bk2, bn = b.block_shape
-    assert bk == bk2
-
     if a.nnzb == 0 or b.nnzb == 0:
         return jnp.zeros((a.shape[0], b.shape[1]), out_dtype)
-
-    if tables is None:
-        tables = build_gust_tables(a, b)  # lint: host-ok (concrete-only fallback)
-    amax, fmax = tables.amax, tables.fmax
-
-    n_padded = nb * bn
-
-    spec = grid_spec(
-        num_scalar_prefetch=6,
-        grid=(mb, amax, fmax),
-        in_specs=[
-            # leader: A row-fiber element (stationary across B's fiber)
-            pl.BlockSpec(
-                (1, bm, bk),
-                lambda i, a, f, asl, aco, ale, bsl, bco, ble:
-                    (asl[i * amax + a], 0, 0),
-            ),
-            # follower: B's row fiber gathered by the leader's k coordinate
-            pl.BlockSpec(
-                (1, bk, bn),
-                lambda i, a, f, asl, aco, ale, bsl, bco, ble:
-                    (bsl[aco[i * amax + a] * fmax + f], 0, 0),
-            ),
-        ],
-        out_specs=pl.BlockSpec(
-            (bm, n_padded),
-            lambda i, a, f, asl, aco, ale, bsl, bco, ble: (i, 0),
-        ),
-        # the stationary output fiber: GAMMA fiber-cache / PSRAM row analogue
-        scratch_shapes=[pltpu.VMEM((bm, n_padded), jnp.float32)],
-    )
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, amax=amax, fmax=fmax, bn=bn),
-        grid_spec=spec,
-        out_shape=jax.ShapeDtypeStruct((mb * bm, n_padded), out_dtype),
-        compiler_params=compiler_params(("parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(
-        jnp.asarray(tables.a_slots), jnp.asarray(tables.a_cols),
-        jnp.asarray(tables.a_len), jnp.asarray(tables.b_slots),
-        jnp.asarray(tables.b_cols), jnp.asarray(tables.b_len),
-        a.data, b.data,
-    )
-    return out[: a.shape[0], : b.shape[1]]
+    if schedule is None:
+        if plan is None:
+            plan = build_gust_plan(a, b)  # lint: host-ok (concrete-only fallback)
+        schedule = schedule_from_stream(plan, by_dest=False)  # lint: host-ok (concrete-only fallback)
+    return stream_panel_spmm(a.data, b.data, schedule,
+                             out_grid=(a.grid[0], b.grid[1]),
+                             out_shape=(a.shape[0], b.shape[1]),
+                             out_dtype=out_dtype, interpret=interpret)

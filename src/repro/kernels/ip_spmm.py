@@ -2,103 +2,50 @@
 
 TPU realization of the paper's IP dataflow (§3.2.1):
 
-- the C block is **stationary** in a VMEM fp32 accumulator;
-- the K co-iteration walks the *intersection* of A's row fiber and B's column
-  fiber.  The intersection is computed at plan time (host) and streamed to the
-  kernel through scalar prefetch — the TPU analogue of the intersection unit:
-  only effectual (k present in both fibers) block pairs are ever fetched;
-- partial sums never leave VMEM (no psum/PSRAM traffic — IP's signature
-  property), each C block is written exactly once.
-
-Grid: ``(Mb, Nb, P)`` with P = max intersection length, padded per C block.
-The padding waste (P − npairs[i,j] idle steps) is IP's intrinsic weakness on
-irregular sparsity — the same effect the paper measures as SIGMA-like
-inefficiency on OP/Gust-friendly layers, reproduced here structurally.
+- the K co-iteration walks the *intersection* of A's row fiber and B's
+  column fiber, computed at plan time (host) — the TPU analogue of the
+  intersection unit: only effectual (k present in both fibers) block pairs
+  are ever fetched;
+- the intersection lists are already destination-major (i, j, p), so they
+  lower directly onto the fused block-run kernel
+  (:func:`repro.kernels.stream.stream_spmm`): the C block is stationary in
+  a VMEM fp32 accumulator for its whole run and partial sums never leave
+  VMEM (no psum/PSRAM traffic — IP's signature property);
+- the grid is the *effectual work list*, not ``(Mb, Nb, P)``: empty
+  C blocks and the padding waste of the old rectangular grid
+  (P − npairs[i,j] idle steps per block) cost zero kernel steps.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
 
 from ..config import resolve_interpret
 from ..core.dataflows import IPPlan, build_ip_plan
 from ..core.formats import BlockCSR, BlockCSC
-from .common import accumulate_or_flush, compiler_params, grid_spec
+from .stream import StreamSchedule, schedule_from_ip, stream_spmm
 
 __all__ = ["ip_spmm"]
 
 
-def _kernel(pair_a_ref, pair_b_ref, npairs_ref, a_ref, b_ref, o_ref, acc_ref,
-            *, nb: int, max_pairs: int):
-    i, j, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
-    n = npairs_ref[i * nb + j]
-    psum = jnp.where(
-        p < n,
-        jnp.dot(a_ref[0], b_ref[0], preferred_element_type=jnp.float32),
-        0.0,
-    )
-    accumulate_or_flush(
-        acc_ref, o_ref, psum,
-        is_first=p == 0,
-        is_last=p == max_pairs - 1,
-    )
-
-
 def ip_spmm(a: BlockCSR, b: BlockCSC, plan: IPPlan | None = None, *,
-            out_dtype=jnp.float32, interpret: bool | None = None) -> jax.Array:
+            schedule: StreamSchedule | None = None, out_dtype=jnp.float32,
+            interpret: bool | None = None) -> jax.Array:
     """C = A @ B via the Inner-Product dataflow.  Returns dense C (M, N).
 
-    ``interpret=None`` defers to the global knob (``REPRO_INTERPRET``).
+    ``schedule`` (from :func:`repro.kernels.stream.schedule_from_ip`)
+    carries the phase-1 work list; omitted, it is rebuilt host-side from
+    ``plan`` (which is itself rebuilt from the operand structure when
+    omitted).  ``interpret=None`` defers to ``REPRO_INTERPRET``.
     """
     interpret = resolve_interpret(interpret)
-    if plan is None:
-        plan = build_ip_plan(a, b)  # lint: host-ok (concrete-only fallback)
-    mb, kb = a.grid
-    kb2, nb = b.grid
-    assert kb == kb2
-    bm, bk = a.block_shape
-    bk2, bn = b.block_shape
-    assert bk == bk2
-
     if a.nnzb == 0 or b.nnzb == 0:
         return jnp.zeros((a.shape[0], b.shape[1]), out_dtype)
-
-    pair_a = jnp.asarray(plan.pair_a.reshape(-1), jnp.int32)
-    pair_b = jnp.asarray(plan.pair_b.reshape(-1), jnp.int32)
-    npairs = jnp.asarray(plan.npairs.reshape(-1), jnp.int32)
-    P = plan.max_pairs
-
-    from jax.experimental.pallas import tpu as pltpu
-
-    spec = grid_spec(
-        num_scalar_prefetch=3,
-        grid=(mb, nb, P),
-        in_specs=[
-            # stationary-fiber operand: one A block per effectual pair
-            pl.BlockSpec(
-                (1, bm, bk),
-                lambda i, j, p, pa, pb, np_: (pa[(i * nb + j) * P + p], 0, 0),
-            ),
-            # streaming operand: matching B block of the intersected k
-            pl.BlockSpec(
-                (1, bk, bn),
-                lambda i, j, p, pa, pb, np_: (pb[(i * nb + j) * P + p], 0, 0),
-            ),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, p, pa, pb, np_: (i, j)),
-        # fp32 accumulator block in VMEM (C-stationary)
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, nb=nb, max_pairs=P),
-        grid_spec=spec,
-        out_shape=jax.ShapeDtypeStruct((mb * bm, nb * bn), out_dtype),
-        compiler_params=compiler_params(("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(pair_a, pair_b, npairs, a.data, b.data)
-    return out[: a.shape[0], : b.shape[1]]
+    if schedule is None:
+        if plan is None:
+            plan = build_ip_plan(a, b)  # lint: host-ok (concrete-only fallback)
+        schedule = schedule_from_ip(plan)  # lint: host-ok (concrete-only fallback)
+    return stream_spmm(a.data, b.data, schedule,
+                       out_grid=(a.grid[0], b.grid[1]),
+                       out_shape=(a.shape[0], b.shape[1]),
+                       out_dtype=out_dtype, interpret=interpret)

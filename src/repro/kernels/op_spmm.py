@@ -1,202 +1,51 @@
-"""Outer-Product (KMN) SpMSpM Pallas kernels — two phases, as in the paper.
+"""Outer-Product (KMN) SpMSpM Pallas kernel — fused stream + merge.
 
-The paper's OP dataflow (§3.2.2) runs a **streaming phase** that produces psum
-fibers into the PSRAM, then a **merging phase** that merges them row by row
-through the MRN.  The TPU realization keeps both phases:
+The paper's OP dataflow (§3.2.2) runs a **streaming phase** producing psum
+fibers into the PSRAM, then a **merging phase** combining them row by row
+through the MRN.  The TPU realization fuses both phases into one kernel:
+the k-major psum work list is **destination-lexsorted at plan time** — the
+host sort plays the PSRAM's set/tag lookup — after which the stream arrives
+merge-ready and the MRN comparator/adder discipline degenerates to
+"accumulate while the destination is unchanged, flush when it moves on"
+(block coordinates are dense, so "compare" is "same/different";
+DESIGN.md §3/§18).
 
-1. ``_stream_kernel`` — K outermost: every effectual (A column element ×
-   B row element) pair produces one psum block, written to an HBM psum buffer
-   (the PSRAM analogue).  Like the hardware, psums for the same C coordinate
-   but different k iterations coexist, tagged by their position in the work
-   list rather than a k register.
-
-2. ``_merge_kernel`` — the psum stream is consumed in destination-sorted order
-   (the host sort plays the PSRAM's set/tag lookup): the kernel accumulates
-   while the destination coordinate is unchanged and flushes a finished fiber
-   downstream — exactly the MRN comparator/adder discipline, at block
-   granularity (block coordinates are dense, so "compare" degenerates to
-   "same/different"; see DESIGN.md §3).
-
-OP's signature cost — psum traffic to/from memory between the two phases — is
-structurally present: the psum buffer makes a full HBM round trip.
+OP's signature hardware cost — psum traffic between the two phases — is
+thereby paid *at plan time* (the sort) instead of at execution time (the
+old HBM psum round trip between two ``pallas_call``s): each psum block now
+goes straight from the MXU into the VMEM run accumulator.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ..config import resolve_interpret
 from ..core.dataflows import StreamPlan, build_op_plan
 from ..core.formats import BlockCSR, BlockCSC
-from .common import accumulate_or_flush, compiler_params, grid_spec
+from .stream import StreamSchedule, schedule_from_stream, stream_spmm
 
-__all__ = ["op_spmm", "merge_psums", "MergePlan", "build_merge_plan"]
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class MergePlan:
-    """Destination-sorted merge schedule for the OP merging phase.
-
-    Pattern-only (phase-1): the PSRAM set/tag lookup played by a host sort of
-    the psum work list's destination coordinates.
-    """
-
-    order: np.ndarray      # (W,) psum stream permutation, destination-sorted
-    is_first: np.ndarray   # (W,) int32 — run boundary flags
-    is_last: np.ndarray
-    run_id: np.ndarray     # (W,) int32 — output fiber index per psum
-    run_ci: np.ndarray     # (n_runs,) destination block coords per run
-    run_cj: np.ndarray
-    n_runs: int
-
-    def tree_flatten(self):
-        return ((self.order, self.is_first, self.is_last, self.run_id,
-                 self.run_ci, self.run_cj), (self.n_runs,))
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
-
-
-def build_merge_plan(ci: np.ndarray, cj: np.ndarray, nb: int) -> MergePlan:
-    """Sort the psum stream by destination and mark run boundaries."""
-    w_total = int(ci.size)
-    order = np.lexsort((cj, ci))                 # row-by-row, then column
-    ci_s, cj_s = ci[order], cj[order]
-    dest = ci_s.astype(np.int64) * nb + cj_s
-    is_first = np.ones(w_total, dtype=np.int32)
-    is_first[1:] = (dest[1:] != dest[:-1]).astype(np.int32)
-    is_last = np.ones(w_total, dtype=np.int32)
-    is_last[:-1] = (dest[1:] != dest[:-1]).astype(np.int32)
-    run_id = np.cumsum(is_first) - 1             # output fiber index
-    n_runs = int(run_id[-1]) + 1 if w_total else 0
-    return MergePlan(order, is_first, is_last, run_id.astype(np.int32),
-                     ci_s[is_first == 1], cj_s[is_first == 1], n_runs)
-
-
-def _stream_kernel(a_slot_ref, b_slot_ref, a_ref, b_ref, psum_ref):
-    del a_slot_ref, b_slot_ref
-    psum_ref[0] = jnp.dot(a_ref[0], b_ref[0],
-                          preferred_element_type=jnp.float32)
-
-
-def _merge_kernel(run_id_ref, is_first_ref, is_last_ref, psum_ref, o_ref,
-                  acc_ref):
-    del run_id_ref
-    w = pl.program_id(0)
-
-    # MRN node discipline: coordinate changed -> new fiber; match -> add;
-    # fiber complete -> emit the merged output fiber downstream.
-    @pl.when(is_first_ref[w] == 1)
-    def _():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += psum_ref[0]
-
-    @pl.when(is_last_ref[w] == 1)
-    def _():
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
-
-
-def merge_psums(psums: jax.Array, ci: np.ndarray, cj: np.ndarray,
-                out_grid: Tuple[int, int], *, merge: MergePlan | None = None,
-                out_dtype=jnp.float32,
-                interpret: bool | None = None) -> jax.Array:
-    """Merging phase: combine a psum block stream by destination coordinate.
-
-    psums: (W, bm, bn) fp32 psum blocks; ci/cj: (W,) destination block coords
-    (host-side).  ``merge`` (from :func:`build_merge_plan`) supplies the
-    phase-1 schedule; omitted, it is rebuilt here.  Returns dense C of shape
-    (Mb*bm, Nb*bn).
-    """
-    interpret = resolve_interpret(interpret)
-    w_total, bm, bn = psums.shape
-    mb, nb = out_grid
-    if merge is None:
-        merge = build_merge_plan(ci, cj, nb)  # lint: host-ok (concrete-only fallback)
-    order, is_first, is_last = merge.order, merge.is_first, merge.is_last
-    run_id, n_runs = merge.run_id, merge.n_runs
-
-    psums_sorted = psums[jnp.asarray(order)]
-
-    spec = grid_spec(
-        num_scalar_prefetch=3,
-        grid=(w_total,),
-        in_specs=[
-            pl.BlockSpec((1, bm, bn), lambda w, rid, fst, lst: (w, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn),
-                               lambda w, rid, fst, lst: (rid[w], 0, 0)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    runs = pl.pallas_call(
-        _merge_kernel,
-        grid_spec=spec,
-        out_shape=jax.ShapeDtypeStruct((n_runs, bm, bn), out_dtype),
-        compiler_params=compiler_params(("arbitrary",)),
-        interpret=interpret,
-    )(jnp.asarray(run_id, jnp.int32), jnp.asarray(is_first),
-      jnp.asarray(is_last), psums_sorted)
-
-    # Final output fibers stream to DRAM; place them in the dense C image.
-    run_ci = jnp.asarray(merge.run_ci, jnp.int32)
-    run_cj = jnp.asarray(merge.run_cj, jnp.int32)
-    c = jnp.zeros((mb, nb, bm, bn), out_dtype)
-    c = c.at[run_ci, run_cj].set(runs)
-    return c.swapaxes(1, 2).reshape(mb * bm, nb * bn)
+__all__ = ["op_spmm"]
 
 
 def op_spmm(a: BlockCSC, b: BlockCSR, plan: StreamPlan | None = None, *,
-            merge: MergePlan | None = None, out_dtype=jnp.float32,
+            schedule: StreamSchedule | None = None, out_dtype=jnp.float32,
             interpret: bool | None = None) -> jax.Array:
     """C = A @ B via the Outer-Product dataflow.  Returns dense C (M, N).
 
-    ``interpret=None`` defers to the global knob (``REPRO_INTERPRET``).
+    ``schedule`` (from :func:`repro.kernels.stream.schedule_from_stream`
+    with ``by_dest=True``) carries the destination-sorted phase-1 work
+    list; omitted, it is rebuilt host-side.  ``interpret=None`` defers to
+    the global knob (``REPRO_INTERPRET``).
     """
     interpret = resolve_interpret(interpret)
-    if plan is None:
-        plan = build_op_plan(a, b)  # lint: host-ok (concrete-only fallback)
-    mb = a.grid[0]
-    nb = b.grid[1]
-    bm, bk = a.block_shape
-    bk2, bn = b.block_shape
-    assert bk == bk2
-
-    w_total = int(plan.a_slot.size)
-    if w_total == 0:
+    if a.nnzb == 0 or b.nnzb == 0:
         return jnp.zeros((a.shape[0], b.shape[1]), out_dtype)
-
-    # ---- streaming phase: psum blocks to the PSRAM (HBM buffer) ----------
-    a_slot = jnp.asarray(plan.a_slot, jnp.int32)
-    b_slot = jnp.asarray(plan.b_slot, jnp.int32)
-    spec = grid_spec(
-        num_scalar_prefetch=2,
-        grid=(w_total,),
-        in_specs=[
-            # stationary operand: A column elements (kept across B's fiber)
-            pl.BlockSpec((1, bm, bk), lambda w, sa, sb: (sa[w], 0, 0)),
-            # streamed operand: B row elements for this k iteration
-            pl.BlockSpec((1, bk, bn), lambda w, sa, sb: (sb[w], 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda w, sa, sb: (w, 0, 0)),
-    )
-    psums = pl.pallas_call(
-        _stream_kernel,
-        grid_spec=spec,
-        out_shape=jax.ShapeDtypeStruct((w_total, bm, bn), jnp.float32),
-        compiler_params=compiler_params(("arbitrary",)),
-        interpret=interpret,
-    )(a_slot, b_slot, a.data, b.data)
-
-    # ---- merging phase: row-by-row through the MRN substrate -------------
-    c = merge_psums(psums, plan.ci, plan.cj, (mb, nb), merge=merge,
-                    out_dtype=out_dtype, interpret=interpret)
-    return c[: a.shape[0], : b.shape[1]]
+    if schedule is None:
+        if plan is None:
+            plan = build_op_plan(a, b)  # lint: host-ok (concrete-only fallback)
+        schedule = schedule_from_stream(plan, by_dest=True)  # lint: host-ok (concrete-only fallback)
+    return stream_spmm(a.data, b.data, schedule,
+                       out_grid=(a.grid[0], b.grid[1]),
+                       out_shape=(a.shape[0], b.shape[1]),
+                       out_dtype=out_dtype, interpret=interpret)

@@ -1,0 +1,373 @@
+"""Unified streaming work-list substrate for the Flexagon Pallas kernels.
+
+All three dataflows enumerate the *same* effectual set
+``{(i, k, j) : A[i,k] != 0 and B[k,j] != 0}`` — they differ only in the
+order the pairs are visited and in the merge discipline applied to the
+resulting psum blocks (paper §3.2, DESIGN.md §3/§18).  This module factors
+that observation into one phase-1 artifact, :class:`StreamSchedule`: a
+flat work list of (A slot, B slot) block pairs annotated with run
+boundaries, consumed by exactly two Pallas kernels:
+
+- :func:`stream_spmm` — the *block-run* kernel.  Work entries arrive
+  destination-major (IP keeps its intersection order; OP is lexsorted by
+  destination at plan time — the host sort plays the PSRAM set/tag
+  lookup), so the MRN discipline degenerates to "accumulate while the
+  run id is unchanged, flush when the fiber completes".  One fused
+  ``pallas_call``: no HBM psum round trip between a streaming and a
+  merging phase.
+- :func:`stream_panel_spmm` — the *row-panel* kernel (Gustavson).  Work
+  entries arrive row-major; the accumulator is a whole stationary output
+  row panel in VMEM (GAMMA's fiber cache) and each psum merges at its
+  follower's column offset immediately.
+
+Both kernels run a 1-D grid over the work list with the operand block
+streams described by scalar-prefetched ``BlockSpec`` index maps — Pallas
+pipelines the per-step DMA, so the next entry's A/B blocks prefetch into
+VMEM while the current entry's ``jnp.dot`` occupies the MXU
+(double-buffering, the paper's 3-tier hierarchy made implicit).
+
+Every array in a :class:`StreamSchedule` is a pytree child, so schedules
+**stack**: :func:`pad_schedule` pads the work and run axes to shared
+maxima, and a stacked schedule drives the same kernels under ``lax.scan``
+(tiled k-slab streaming) or ``shard_map`` (collective merge).  Padding
+relies on jax's scatter semantics — out-of-bounds ``.at[].set`` rows are
+dropped — so pad runs target a reserved out-of-bounds destination row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..config import resolve_interpret
+from ..core.dataflows import IPPlan, StreamPlan
+from .common import compiler_params, grid_spec
+
+__all__ = [
+    "StreamSchedule",
+    "schedule_from_ip",
+    "schedule_from_stream",
+    "pad_schedule",
+    "stream_spmm",
+    "stream_panel_spmm",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StreamSchedule:
+    """Phase-1 work list + run boundaries for the streaming kernels.
+
+    Pattern-only.  All arrays are pytree *children* (nothing
+    shape-varying hides in the treedef), so schedules padded to common
+    extents stack into slab/shard axes and trace through ``lax.scan``.
+    """
+
+    a_slot: np.ndarray     # (W,) int32 — A block slot per work entry
+    b_slot: np.ndarray     # (W,) int32 — B block slot per work entry
+    cj: np.ndarray         # (W,) int32 — destination block column (panel merge)
+    is_first: np.ndarray   # (W,) int32 — run boundary flags
+    is_last: np.ndarray
+    run_id: np.ndarray     # (W,) int32 — output fiber index per entry
+    run_ci: np.ndarray     # (R,) int32 — destination block coords per run
+    run_cj: np.ndarray     # (R,) int32
+    n_runs: int            # == R (static; uniform after pad_schedule)
+
+    def tree_flatten(self):
+        return ((self.a_slot, self.b_slot, self.cj, self.is_first,
+                 self.is_last, self.run_id, self.run_ci, self.run_cj),
+                (self.n_runs,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def _empty_schedule() -> StreamSchedule:
+    z = np.zeros(0, np.int32)
+    return StreamSchedule(z, z, z, z, z, z, z, z, 0)
+
+
+def _runs_from_boundaries(newrun: np.ndarray, w: int):
+    is_first = np.ones(w, np.int32)
+    is_first[1:] = newrun.astype(np.int32)
+    is_last = np.ones(w, np.int32)
+    is_last[:-1] = newrun.astype(np.int32)
+    run_id = (np.cumsum(is_first) - 1).astype(np.int32)
+    return is_first, is_last, run_id
+
+
+def schedule_from_ip(plan: IPPlan) -> StreamSchedule:
+    """IP: intersection lists are already destination-major (i, j, p)."""
+    pair_a = np.asarray(plan.pair_a)
+    pair_b = np.asarray(plan.pair_b)
+    npairs = np.asarray(plan.npairs)
+    mb, nb, p_max = pair_a.shape
+    mask = np.arange(p_max)[None, None, :] < npairs[..., None]
+    w = int(mask.sum())
+    if w == 0:
+        return _empty_schedule()
+    a_slot = pair_a[mask].astype(np.int32)
+    b_slot = pair_b[mask].astype(np.int32)
+    ri, rj = np.nonzero(npairs)
+    counts = npairs[ri, rj]
+    cj = np.repeat(rj, counts).astype(np.int32)
+    is_first = np.zeros(w, np.int32)
+    is_first[np.cumsum(counts) - counts] = 1
+    is_last = np.zeros(w, np.int32)
+    is_last[np.cumsum(counts) - 1] = 1
+    run_id = np.repeat(np.arange(ri.size), counts).astype(np.int32)
+    return StreamSchedule(a_slot, b_slot, cj, is_first, is_last, run_id,
+                          ri.astype(np.int32), rj.astype(np.int32),
+                          int(ri.size))
+
+
+def schedule_from_stream(plan: StreamPlan, *, by_dest: bool) -> StreamSchedule:
+    """OP/Gust: order a :class:`StreamPlan` work list into runs.
+
+    ``by_dest=True`` (OP) lexsorts the k-major psum stream by destination
+    block — the PSRAM set/tag lookup as a host sort — so the single fused
+    kernel can merge in-VMEM with no HBM psum round trip.  ``by_dest=False``
+    (Gust) keeps the i-major leader/follower order and forms one run per
+    output row panel.
+
+    Padded work entries (``_pad_stream``) carry an out-of-bounds ``ci``;
+    they sort/group into their own runs whose destination row is dropped by
+    the final scatter, so padded plans need no special handling here.
+    """
+    ci = np.asarray(plan.ci)
+    cj = np.asarray(plan.cj)
+    a_slot = np.asarray(plan.a_slot).astype(np.int32)
+    b_slot = np.asarray(plan.b_slot).astype(np.int32)
+    w = int(ci.size)
+    if w == 0:
+        return _empty_schedule()
+    if by_dest:
+        order = np.lexsort((cj, ci))
+        ci, cj = ci[order], cj[order]
+        a_slot, b_slot = a_slot[order], b_slot[order]
+        newrun = (ci[1:] != ci[:-1]) | (cj[1:] != cj[:-1])
+    else:
+        newrun = ci[1:] != ci[:-1]
+    is_first, is_last, run_id = _runs_from_boundaries(newrun, w)
+    run_ci = ci[is_first == 1].astype(np.int32)
+    run_cj = (cj[is_first == 1] if by_dest
+              else np.zeros(run_ci.size)).astype(np.int32)
+    return StreamSchedule(a_slot, b_slot, cj.astype(np.int32),
+                          is_first, is_last, run_id,
+                          run_ci, run_cj, int(run_ci.size))
+
+
+def pad_schedule(s: StreamSchedule, w_total: int, r_total: int,
+                 oob_row: int) -> StreamSchedule:
+    """Pad a schedule to shared (work, run) extents so schedules stack.
+
+    Pad work entries are each a self-contained single-entry run (reset,
+    one add of real-but-irrelevant blocks, flush) targeting the reserved
+    run slot ``r_total - 1``; every pad run slot's destination row is
+    ``oob_row`` (one past the output grid), so jax's scatter drops it.
+    """
+    w = int(np.asarray(s.a_slot).size)
+    wpad = w_total - w
+    rpad = r_total - s.n_runs
+    if wpad < 0 or rpad < 0 or (wpad > 0 and rpad == 0):
+        raise ValueError(
+            f"cannot pad schedule (W={w}, R={s.n_runs}) to "
+            f"(W={w_total}, R={r_total})")
+    if wpad == 0 and rpad == 0:
+        return s
+    zero = np.zeros(wpad, np.int32)
+    one = np.ones(wpad, np.int32)
+    return StreamSchedule(
+        np.concatenate([np.asarray(s.a_slot, np.int32), zero]),
+        np.concatenate([np.asarray(s.b_slot, np.int32), zero]),
+        np.concatenate([np.asarray(s.cj, np.int32), zero]),
+        np.concatenate([np.asarray(s.is_first, np.int32), one]),
+        np.concatenate([np.asarray(s.is_last, np.int32), one]),
+        np.concatenate([np.asarray(s.run_id, np.int32),
+                        np.full(wpad, r_total - 1, np.int32)]),
+        np.concatenate([np.asarray(s.run_ci, np.int32),
+                        np.full(rpad, oob_row, np.int32)]),
+        np.concatenate([np.asarray(s.run_cj, np.int32),
+                        np.zeros(rpad, np.int32)]),
+        r_total,
+    )
+
+
+def _run_kernel(a_slot_ref, b_slot_ref, is_first_ref, is_last_ref,
+                run_id_ref, a_ref, b_ref, o_ref, acc_ref):
+    del a_slot_ref, b_slot_ref, run_id_ref
+    w = pl.program_id(0)
+
+    # MRN node discipline at block granularity: coordinate changed -> new
+    # fiber; match -> add on the MXU; fiber complete -> emit downstream.
+    @pl.when(is_first_ref[w] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0], b_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(is_last_ref[w] == 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def stream_spmm(a_data: jax.Array, b_data: jax.Array, sched: StreamSchedule,
+                *, out_grid: Tuple[int, int], out_shape: Tuple[int, int],
+                out_dtype=jnp.float32,
+                interpret: bool | None = None) -> jax.Array:
+    """Run a destination-major schedule through the fused block-run kernel.
+
+    ``a_data``/``b_data`` are the compressed operands' block stacks
+    (``(nnzb, bm, bk)`` / ``(nnzb, bk, bn)``); they and the schedule's
+    children may be traced (stacked slab/shard members under ``lax.scan``
+    or ``shard_map``) — only array *shapes* shape the grid.
+
+    The body is jit-cached per (shapes, config) signature: eager callers
+    (an unjitted ``plan.apply`` serving loop) pay tracing once, then every
+    apply runs the compiled executable — in interpret mode this is the
+    difference between re-walking the grid in Python per call and one
+    compiled scan over it.
+    """
+    return _stream_spmm(a_data, b_data, sched,
+                        out_grid=tuple(out_grid),
+                        out_shape=tuple(out_shape), out_dtype=out_dtype,
+                        interpret=bool(resolve_interpret(interpret)))
+
+
+@functools.partial(jax.jit, static_argnames=("out_grid", "out_shape",
+                                             "out_dtype", "interpret"))
+def _stream_spmm(a_data, b_data, sched, *, out_grid, out_shape, out_dtype,
+                 interpret):
+    w_total = int(sched.a_slot.shape[0])
+    mb, nb = out_grid
+    bm, bk = a_data.shape[1], a_data.shape[2]
+    bn = b_data.shape[2]
+    if w_total == 0:
+        return jnp.zeros(out_shape, out_dtype)
+
+    spec = grid_spec(
+        num_scalar_prefetch=5,
+        grid=(w_total,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk),
+                         lambda w, sa, sb, fst, lst, rid: (sa[w], 0, 0)),
+            pl.BlockSpec((1, bk, bn),
+                         lambda w, sa, sb, fst, lst, rid: (sb[w], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bm, bn), lambda w, sa, sb, fst, lst, rid: (rid[w], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    runs = pl.pallas_call(
+        _run_kernel,
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((sched.n_runs, bm, bn), out_dtype),
+        compiler_params=compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(sched.a_slot, jnp.int32),
+      jnp.asarray(sched.b_slot, jnp.int32),
+      jnp.asarray(sched.is_first, jnp.int32),
+      jnp.asarray(sched.is_last, jnp.int32),
+      jnp.asarray(sched.run_id, jnp.int32),
+      a_data, b_data)
+
+    # Finished fibers stream to DRAM: place runs in the dense C image.
+    # Pad runs carry an out-of-bounds row — the scatter drops them.
+    c = jnp.zeros((mb, nb, bm, bn), out_dtype)
+    c = c.at[jnp.asarray(sched.run_ci, jnp.int32),
+             jnp.asarray(sched.run_cj, jnp.int32)].set(runs)
+    c = c.swapaxes(1, 2).reshape(mb * bm, nb * bn)
+    return c[: out_shape[0], : out_shape[1]]
+
+
+def _panel_kernel(a_slot_ref, b_slot_ref, cj_ref, is_first_ref, is_last_ref,
+                  run_id_ref, a_ref, b_ref, o_ref, acc_ref, *, bn: int):
+    del a_slot_ref, b_slot_ref, run_id_ref
+    w = pl.program_id(0)
+
+    @pl.when(is_first_ref[w] == 1)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    psum = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=jnp.float32)
+    # merge into the stationary output fiber at the follower's coordinate
+    acc_ref[:, pl.ds(cj_ref[w] * bn, bn)] += psum
+
+    @pl.when(is_last_ref[w] == 1)
+    def _():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def stream_panel_spmm(a_data: jax.Array, b_data: jax.Array,
+                      sched: StreamSchedule, *, out_grid: Tuple[int, int],
+                      out_shape: Tuple[int, int], out_dtype=jnp.float32,
+                      interpret: bool | None = None) -> jax.Array:
+    """Run a row-major schedule through the stationary row-panel kernel.
+
+    One ``(bm, Nb*bn)`` fp32 accumulator panel lives in VMEM per run
+    (Gustavson: GAMMA's fiber cache); psums merge immediately at their
+    follower's column offset, so C is written once per row panel.
+
+    Jit-cached like :func:`stream_spmm` — eager serving loops trace once
+    per signature and then run the compiled executable.
+    """
+    return _stream_panel_spmm(a_data, b_data, sched,
+                              out_grid=tuple(out_grid),
+                              out_shape=tuple(out_shape),
+                              out_dtype=out_dtype,
+                              interpret=bool(resolve_interpret(interpret)))
+
+
+@functools.partial(jax.jit, static_argnames=("out_grid", "out_shape",
+                                             "out_dtype", "interpret"))
+def _stream_panel_spmm(a_data, b_data, sched, *, out_grid, out_shape,
+                       out_dtype, interpret):
+    w_total = int(sched.a_slot.shape[0])
+    mb, nb = out_grid
+    bm, bk = a_data.shape[1], a_data.shape[2]
+    bn = b_data.shape[2]
+    if w_total == 0:
+        return jnp.zeros(out_shape, out_dtype)
+    n_padded = nb * bn
+
+    spec = grid_spec(
+        num_scalar_prefetch=6,
+        grid=(w_total,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk),
+                         lambda w, sa, sb, cj, fst, lst, rid: (sa[w], 0, 0)),
+            pl.BlockSpec((1, bk, bn),
+                         lambda w, sa, sb, cj, fst, lst, rid: (sb[w], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bm, n_padded),
+            lambda w, sa, sb, cj, fst, lst, rid: (rid[w], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, n_padded), jnp.float32)],
+    )
+    runs = pl.pallas_call(
+        functools.partial(_panel_kernel, bn=bn),
+        grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((sched.n_runs, bm, n_padded),
+                                       out_dtype),
+        compiler_params=compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(sched.a_slot, jnp.int32),
+      jnp.asarray(sched.b_slot, jnp.int32),
+      jnp.asarray(sched.cj, jnp.int32),
+      jnp.asarray(sched.is_first, jnp.int32),
+      jnp.asarray(sched.is_last, jnp.int32),
+      jnp.asarray(sched.run_id, jnp.int32),
+      a_data, b_data)
+
+    c = jnp.zeros((mb, bm, n_padded), out_dtype)
+    c = c.at[jnp.asarray(sched.run_ci, jnp.int32)].set(runs)
+    c = c.reshape(mb * bm, n_padded)
+    return c[: out_shape[0], : out_shape[1]]

@@ -369,6 +369,10 @@ class TiledPlan:
                 budget=self.budget, backend=be, interpret=self.interpret,
                 fingerprint=self.fingerprint)
         plans = tuple(p.with_backend(be) for p in self.plans)
+        if self.scan_ok:
+            # re-preparing per plan makes aux non-uniform again; re-pad
+            # before restacking the slab axis
+            be.uniform_aux(list(plans))
         return dataclasses.replace(
             self, backend=be.name, plans=plans,
             scan_stacked=_stack_plans(plans) if self.scan_ok else None)
@@ -611,6 +615,9 @@ def plan_tiled(*, dataflow: str, occ_a: np.ndarray, occ_b: np.ndarray,
 
     for p in plans:
         p.aux = backend.prepare(p)
+    if scan_ok:
+        # backend aux schedules must stack too (shape-uniform across slabs)
+        backend.uniform_aux(plans)
 
     return TiledPlan(
         dataflow=dataflow, tiles=tuple(tiles), merge_plan=merge_plan,
@@ -710,6 +717,8 @@ def _plan_mixed(*, occ_a: np.ndarray, occ_b: np.ndarray,
         for p in group_plans:
             p.aux = backend.prepare(p)
         if lane:
+            # backend aux must be shape-uniform across the lane's members
+            backend.uniform_aux(group_plans)
             scan_group_meta.append((d, tuple(idxs)))
             scan_group_stacks.append(_stack_plans(group_plans))
         for i, p in zip(idxs, group_plans):

@@ -157,13 +157,24 @@ def test_mutation_overlapping_tiles():
 def test_mutation_scan_plan_on_non_streaming_backend():
     """A plan whose structure needs lax.scan k-slab streaming cannot be
     pointed at a backend that does not declare scan_streaming."""
+    from repro.backends import register_backend
+    from repro.backends.reference import ReferenceBackend
+
+    class NoScanBackend(ReferenceBackend):
+        name = "test-no-scan"
+        scan_streaming = False
+
+    register_backend(NoScanBackend(), overwrite=True)
     a, b = _operands()
     plan = flexagon_plan(a, b, dataflow="op_m", block_shape=BS,
                          memory_budget=TILING, backend="reference")
     assert plan.scan_ok, "op_m under this budget should take the scan path"
-    bad = dataclasses.replace(plan, backend="pallas")
+    # pallas scans stacked schedules now, so the mutation needs a stub that
+    # opts out of scan_streaming to trip the capability check
+    bad = dataclasses.replace(plan, backend="test-no-scan")
     assert "backend-capability" in _codes(verify_plan(bad))
     # the supported route is with_backend, which rebuilds the plan shape
+    assert not errors_of(verify_plan(plan.with_backend("test-no-scan")))
     assert not errors_of(verify_plan(plan.with_backend("pallas")))
 
 

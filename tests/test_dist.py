@@ -98,13 +98,35 @@ def test_jit_apply_and_pytree_roundtrip(ab, virtual_mesh):
 
 
 def test_serial_fallback_backend(ab):
-    """A backend without collective_merge gets the unrolled shard loop."""
+    """A backend without collective_merge gets the unrolled shard loop.
+
+    Every built-in backend now declares collective_merge, so the fallback
+    is exercised through a locally registered stub that opts out.
+    """
+    from repro.backends.reference import ReferenceBackend
+
+    class NoCollectiveBackend(ReferenceBackend):
+        name = "test-no-collective"
+        collective_merge = False
+
+    a, b = ab
+    mesh = make_virtual_mesh(2)
+    plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS, mesh=mesh,
+                         backend=NoCollectiveBackend())
+    assert isinstance(plan, ShardedPlan)
+    assert not plan.shard_ok
+    np.testing.assert_allclose(np.asarray(plan.apply(a, b)), a @ b,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_collective_merge(ab):
+    """pallas shards through shard_map + psum (collective merge parity)."""
     a, b = ab
     mesh = make_virtual_mesh(2)
     plan = flexagon_plan(a, b, dataflow="ip_m", block_shape=BS, mesh=mesh,
                          backend="pallas", interpret=True)
     assert isinstance(plan, ShardedPlan)
-    assert not plan.shard_ok
+    assert plan.shard_ok
     np.testing.assert_allclose(np.asarray(plan.apply(a, b)), a @ b,
                                rtol=1e-4, atol=1e-4)
 

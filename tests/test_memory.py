@@ -237,10 +237,10 @@ def test_op_scan_streaming_and_backend_retarget():
     assert plan.scan_ok and get_backend("reference").scan_streaming
     ref = np.asarray(plan.apply(a, b))
 
-    # pallas does not scan stacked (traced) schedules: retargeting re-tiles
-    # into the unrolled form, numerics unchanged
+    # pallas scans stacked (traced) StreamSchedules too: retargeting keeps
+    # the tiling and the scan path, numerics unchanged
     on_pallas = plan.with_backend("pallas")
-    assert on_pallas.backend == "pallas" and not on_pallas.scan_ok
+    assert on_pallas.backend == "pallas" and on_pallas.scan_ok
     np.testing.assert_allclose(np.asarray(on_pallas.apply(a, b)), ref,
                                rtol=1e-4, atol=1e-4)
     back = on_pallas.with_backend("reference")
@@ -254,8 +254,8 @@ def test_tiled_plan_built_on_pallas_backend():
     plan = flexagon_plan(a, b, dataflow="gust_m", block_shape=BS,
                          backend="pallas", memory_budget=TINY)
     assert isinstance(plan, TiledPlan) and plan.n_tiles >= 2
-    # per-band GustTables were prepared for every tile sub-plan
-    assert all("gust_tables" in (p.aux or {}) for p in plan.plans)
+    # a per-band StreamSchedule was prepared for every tile sub-plan
+    assert all("stream_schedule" in (p.aux or {}) for p in plan.plans)
     np.testing.assert_allclose(np.asarray(plan.apply(a, b)), a @ b,
                                rtol=1e-3, atol=1e-3)
 

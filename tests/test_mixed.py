@@ -181,7 +181,7 @@ def test_selection_context_carries_tile():
 # ---------------------------------------------------------------------------
 
 
-def test_mixed_scan_lanes_on_reference_unroll_on_pallas():
+def test_mixed_scan_lanes_on_both_backends():
     a, b = _hetero_case()
     plan = flexagon_plan(a, b, dataflow="mixed", block_shape=BS,
                          memory_budget=MANY)
@@ -192,10 +192,12 @@ def test_mixed_scan_lanes_on_reference_unroll_on_pallas():
     ref = np.asarray(plan.apply(a, b))
     np.testing.assert_allclose(ref, a @ b, rtol=1e-3, atol=1e-3)
 
-    # pallas consumes concrete host-side schedules: no lanes, same numbers,
-    # and re-targeting pins the per-tile choices (never re-selects)
+    # pallas scans stacked StreamSchedules too (uniform_aux pads lane
+    # members to shared extents): same lanes, same numbers, and
+    # re-targeting pins the per-tile choices (never re-selects)
     on_pallas = plan.with_backend("pallas")
-    assert on_pallas.backend == "pallas" and not on_pallas.scan_group_meta
+    assert on_pallas.backend == "pallas"
+    assert dict((d, len(i)) for d, i in on_pallas.scan_group_meta) == lanes
     assert on_pallas.tile_dataflows == plan.tile_dataflows
     np.testing.assert_allclose(np.asarray(on_pallas.apply(a, b)), ref,
                                rtol=1e-4, atol=1e-4)
