@@ -51,6 +51,7 @@ from collections import Counter
 import numpy as np
 
 from repro import PAPER_BUDGET, flexagon_plan, get_policy
+from repro.analysis import check_schedule, verify_plan
 from repro.backends import SelectionContext, allowed_dataflows, get_backend
 from repro.core import random_sparse_dense
 from repro.core.formats import block_occupancy
@@ -157,6 +158,28 @@ def run(quick: bool = False, verify: bool = False) -> list[Row]:
             err = float(np.abs(np.asarray(plan.apply(a, b)) - ref).max())
             rows.append(Row(f"kernels/{name}/{backend}/plan_build", build_us,
                             f"dataflow={plan.dataflow}"))
+            # static-analysis overhead (DESIGN.md §19): full verify_plan —
+            # plan invariants + the schedule checker — on the built plan,
+            # plus the schedule checker alone, both as fractions of
+            # plan_build so the "checker costs <10% of planning" budget is
+            # tracked as a bench trajectory, not an anecdote
+            verify_us = _time(lambda: len(verify_plan(plan)),
+                              reps=max(reps, 2))
+            if getattr(plan, "aux", None) \
+                    and "stream_schedule" in plan.aux:
+                sched_us = _time(lambda: len(check_schedule(plan)),
+                                 reps=max(reps, 2))
+            else:
+                sched_us = 0.0      # no aux schedule on this backend
+            rows.append(Row(
+                f"kernels/{name}/{backend}/plan_verify", verify_us,
+                f"of_build={verify_us / build_us:.3f} "
+                f"sched_of_build={sched_us / build_us:.3f}",
+                extra={"verify_us": verify_us, "build_us": build_us,
+                       "schedule_checker_us": sched_us,
+                       "verify_over_build": verify_us / build_us,
+                       "schedule_checker_over_build":
+                           sched_us / build_us}))
             rows.append(Row(f"kernels/{name}/{backend}/plan_apply", apply_us,
                             f"max_err={err:.1e}"))
             rows.append(Row(f"kernels/{name}/{backend}/per_call", per_call_us,

@@ -22,6 +22,10 @@ __all__ = [
     "TraceReport",
     "RetraceDetector",
     "Observation",
+    "index_map_report",
+    "IndexMapReport",
+    "check_schedule",
+    "check_stack_uniform",
     "lint_paths",
 ]
 
@@ -32,6 +36,10 @@ _LAZY = {
     "TraceReport": "jaxpr",
     "RetraceDetector": "jaxpr",
     "Observation": "jaxpr",
+    "index_map_report": "jaxpr",
+    "IndexMapReport": "jaxpr",
+    "check_schedule": "schedule",
+    "check_stack_uniform": "schedule",
     "lint_paths": "lint",
 }
 

@@ -1,0 +1,162 @@
+"""Unified analysis CLI — ``python -m repro.analysis <subcommand>``.
+
+One entry point over the whole static-analysis layer (DESIGN.md §15/§19),
+replacing the lint-only ``python -m repro.analysis.lint`` (which still
+works; it is the ``lint`` subcommand):
+
+- ``lint [paths...]``        — repo-specific AST lint (``repro.analysis.lint``)
+- ``verify [options]``       — build a demo sweep of every plan family
+  (six dataflows, mixed, tiled scan, 2-way sharded) and run the full
+  ``verify_plan`` invariant + schedule checker on each
+- ``jaxpr [options]``        — ``trace_report`` purity/cost/identity over
+  the same sweep, plus the ``index_map_report`` audit of both fused
+  kernels' scalar-prefetch index maps
+- ``schedule [options]``     — the static schedule-checker sweep alone
+  (``repro.analysis.schedule``)
+- ``all [paths...]``         — every pass; the exit code aggregates one
+  bit per failing stage (lint=1, verify=2, jaxpr=4, schedule=8), so CI
+  sees exactly which layers broke from the code alone.
+"""
+from __future__ import annotations
+
+import sys
+from typing import List, Optional
+
+_USAGE = """\
+usage: python -m repro.analysis <subcommand> [args...]
+
+subcommands:
+  lint [paths...]     repo-specific AST lint (default path: src/)
+  verify              verify_plan + schedule checker over a plan-family sweep
+  jaxpr               trace_report purity/cost + index-map audit over the sweep
+  schedule            static schedule-checker sweep
+  all [paths...]      run every pass; exit code ORs one bit per failing stage
+"""
+
+_BITS = {"lint": 1, "verify": 2, "jaxpr": 4, "schedule": 8}
+
+
+def _demo_plans(args):
+    """One plan per family the verifier dispatches on."""
+    import numpy as np
+
+    from .. import DistPartition, MemoryBudget, flexagon_plan
+    from ..core import dataflows as df
+    from ..core import random_sparse_dense
+
+    rng = np.random.default_rng(args.seed)
+    m, k, n = args.shape
+    bs = tuple(args.block)
+    a = random_sparse_dense(rng, (m, k), density=args.density,
+                            block_shape=bs[:2])
+    b = random_sparse_dense(rng, (k, n), density=args.density,
+                            block_shape=bs[1:])
+    budget = MemoryBudget(l1_bytes=1024, l2_bytes=2048)
+    for dataflow in df.DATAFLOWS:
+        yield dataflow, flexagon_plan(a, b, dataflow=dataflow,
+                                      block_shape=bs, backend=args.backend,
+                                      verify=False)
+    yield "mixed", flexagon_plan(a, b, dataflow="mixed", block_shape=bs,
+                                 backend=args.backend, verify=False,
+                                 memory_budget=budget)
+    yield "op_m/tiled", flexagon_plan(a, b, dataflow="op_m", block_shape=bs,
+                                      backend=args.backend, verify=False,
+                                      memory_budget=budget)
+    yield "op_m/sharded", flexagon_plan(
+        a, b, dataflow="op_m", block_shape=bs, backend=args.backend,
+        verify=False, partition=DistPartition(shards=2))
+
+
+def _sweep_parser(prog: str):
+    import argparse
+
+    parser = argparse.ArgumentParser(prog=f"python -m repro.analysis {prog}")
+    parser.add_argument("--shape", type=int, nargs=3, default=(64, 48, 80),
+                        metavar=("M", "K", "N"))
+    parser.add_argument("--block", type=int, nargs=3, default=(16, 16, 16),
+                        metavar=("BM", "BK", "BN"))
+    parser.add_argument("--density", type=float, default=0.35)
+    parser.add_argument("--seed", type=int, default=0)
+    parser.add_argument("--backend", default="pallas")
+    return parser
+
+
+def _verify_main(argv: Optional[List[str]] = None) -> int:
+    args = _sweep_parser("verify").parse_args(argv)
+    from .verify import verify_plan
+
+    failures = 0
+    for label, plan in _demo_plans(args):
+        diags = verify_plan(plan)
+        errs = [d for d in diags if d.is_error]
+        failures += len(errs)
+        print(f"  {label:<14} {type(plan).__name__:<14} "
+              f"{len(diags)} diagnostic(s)  {'FAIL' if errs else 'ok'}")
+        for d in errs:
+            print(f"    {d}")
+    print(f"verify sweep: {failures} error(s)")
+    return 1 if failures else 0
+
+
+def _jaxpr_main(argv: Optional[List[str]] = None) -> int:
+    args = _sweep_parser("jaxpr").parse_args(argv)
+    from .jaxpr import index_map_report, trace_report
+
+    failures = 0
+    for label, plan in _demo_plans(args):
+        report = trace_report(plan)
+        errs = [d for d in report.diagnostics if d.is_error]
+        failures += len(errs)
+        print(f"  {label:<14} pure={report.pure} "
+              f"flops={report.flops:.3e} hash={report.aval_hash[:12]} "
+              f"{'FAIL' if errs else 'ok'}")
+        for d in errs:
+            print(f"    {d}")
+    for kind in ("dest", "panel"):
+        imr = index_map_report(kind, 64, 16)
+        failures += len(imr.diagnostics)
+        print(f"  index-maps[{kind}] "
+              f"{'FAIL' if imr.diagnostics else 'ok'}")
+        for d in imr.diagnostics:
+            print(f"    {d}")
+    print(f"jaxpr sweep: {failures} error(s)")
+    return 1 if failures else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print(_USAGE, end="")
+        return 0 if argv else 2
+    cmd, rest = argv[0], argv[1:]
+
+    from . import lint, schedule
+
+    if cmd == "lint":
+        return lint.main(rest or ["src/"])
+    if cmd == "verify":
+        return _verify_main(rest)
+    if cmd == "jaxpr":
+        return _jaxpr_main(rest)
+    if cmd == "schedule":
+        return schedule.main(rest)
+    if cmd == "all":
+        code = 0
+        stages = {
+            "lint": lambda: lint.main(rest or ["src/"]),
+            "verify": lambda: _verify_main([]),
+            "jaxpr": lambda: _jaxpr_main([]),
+            "schedule": lambda: schedule.main([]),
+        }
+        for name, run in stages.items():
+            print(f"== {name} ==")
+            if run() != 0:
+                code |= _BITS[name]
+        return code
+    print(_USAGE, end="", file=sys.stderr)
+    print(f"unknown subcommand: {cmd!r}", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,7 @@ statically certifies the properties the serving path depends on:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from collections import Counter
 from typing import Any, Dict, List, Optional, Tuple
@@ -32,7 +33,8 @@ import numpy as np
 
 from .diagnostics import ERROR, WARNING, PlanDiagnostic
 
-__all__ = ["TraceReport", "trace_report", "RetraceDetector", "Observation"]
+__all__ = ["TraceReport", "trace_report", "RetraceDetector", "Observation",
+           "IndexMapReport", "index_map_report"]
 
 #: Primitive names that imply a host round-trip inside traced code.
 HOST_CALLBACK_PRIMITIVES = frozenset({
@@ -175,6 +177,106 @@ def trace_report(plan: Any, out_dtype=jnp.float32,
                        flops=costs[0], bytes=costs[1],
                        aval_hash=digest.hexdigest(),
                        diagnostics=tuple(diags))
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexMapReport:
+    """Static audit of one schedule kind's scalar-prefetch index maps."""
+
+    kind: str
+    w_total: int
+    n_runs: int
+    aval_hashes: Dict[str, str]        # operand name -> stable trace hash
+    diagnostics: Tuple[PlanDiagnostic, ...]
+
+    @property
+    def clean(self) -> bool:
+        return not self.diagnostics
+
+
+def _jaxpr_hash(closed) -> str:
+    digest = hashlib.sha1()
+    digest.update(str(closed.jaxpr).encode())
+    digest.update(repr([str(v.aval) for v in closed.jaxpr.invars]).encode())
+    digest.update(repr([str(getattr(v, "aval", v))
+                        for v in closed.jaxpr.outvars]).encode())
+    return digest.hexdigest()
+
+
+@functools.lru_cache(maxsize=128)
+def index_map_report(kind: str, w_total: int,
+                     n_runs: int = 0) -> IndexMapReport:
+    """Audit the fused kernels' ``BlockSpec`` index maps for one schedule.
+
+    The streaming kernels' grids are shaped by the index maps exported as
+    :data:`repro.kernels.stream.INDEX_MAPS`; a hazard there is a *compile-*
+    or *DMA-time* failure class the plan verifier cannot see from the
+    schedule arrays alone.  Each map is traced abstractly over the
+    scalar-prefetch operands a (W=``w_total``) schedule provides and
+    checked for:
+
+    - **block-index shape** — exactly one block coordinate per operand
+      axis, every coordinate a scalar integer (a vector or float output
+      would mis-slice the operand stream);
+    - **purity** — no host-callback primitives inside the map (a callback
+      per grid step would serialize the DMA pipeline through the host);
+    - **retrace identity** — tracing twice hashes identically, so the
+      map cannot leak trace-dependent state into the grid (the
+      ``pallas_call`` would silently recompile per apply).
+
+    Results are cached per (kind, W, R) — the checker calls this once per
+    distinct schedule shape, not per plan.
+    """
+    from ..kernels.stream import INDEX_MAPS
+
+    num_prefetch, maps = INDEX_MAPS[kind]
+    if w_total == 0:
+        return IndexMapReport(kind, 0, n_runs, {}, ())
+
+    def _trace(fn):
+        try:
+            return jax.make_jaxpr(fn)(
+                jax.ShapeDtypeStruct((), jnp.int32),
+                *[jax.ShapeDtypeStruct((w_total,), jnp.int32)] * num_prefetch)
+        except TypeError:
+            # some jax versions want concrete arrays for make_jaxpr
+            return jax.make_jaxpr(fn)(
+                jnp.zeros((), jnp.int32),
+                *[jnp.zeros((w_total,), jnp.int32)] * num_prefetch)
+
+    diags: List[PlanDiagnostic] = []
+    hashes: Dict[str, str] = {}
+    for name, fn in maps.items():
+        closed = _trace(fn)
+        hashes[name] = _jaxpr_hash(closed)
+        loc = f"INDEX_MAPS[{kind!r}][{name!r}]"
+        outs = closed.jaxpr.outvars
+        bad = [v for v in outs
+               if getattr(getattr(v, "aval", None), "shape", None) != ()
+               or not jnp.issubdtype(getattr(v, "aval").dtype, jnp.integer)]
+        if len(outs) != 3 or bad:
+            diags.append(PlanDiagnostic(
+                code="schedule-index-map", severity=ERROR,
+                message=f"index map returns {len(outs)} output(s) with "
+                        f"{len(bad)} non-scalar-integer aval(s); the "
+                        "operand streams are 3-D block stacks addressed by "
+                        "scalar block coordinates", location=loc))
+        prims: Counter = Counter()
+        callbacks: Counter = Counter()
+        _walk(closed.jaxpr, prims, callbacks, [0.0, 0.0], 1.0)
+        if callbacks:
+            diags.append(PlanDiagnostic(
+                code="schedule-index-map", severity=ERROR,
+                message=f"index map traces host callback(s) "
+                        f"{sorted(callbacks)} — every grid step would "
+                        "round-trip to the host", location=loc))
+        if _jaxpr_hash(_trace(fn)) != hashes[name]:
+            diags.append(PlanDiagnostic(
+                code="schedule-index-map", severity=ERROR,
+                message="index map does not trace reproducibly — the "
+                        "fused kernel would silently retrace per apply",
+                location=loc))
+    return IndexMapReport(kind, w_total, n_runs, hashes, tuple(diags))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,6 +29,14 @@ phase-1 / phase-2 split the codebase is built around (DESIGN.md §15):
     dispatches to).  Anywhere else bypasses interpret-mode resolution and
     backend capability checks.
 
+``schedule-call`` (error)
+    ``pl.pallas_call`` and raw ``StreamSchedule(...)`` construction may
+    appear only under ``src/repro/kernels/`` — the one place the schedule
+    self-description contract (DESIGN.md §19) is upheld.  A schedule
+    hand-built anywhere else bypasses ``schedule_from_ip`` /
+    ``schedule_from_stream`` / ``pad_schedule`` and therefore everything
+    the static schedule checker proves about planner-emitted schedules.
+
 ``obs-time`` (error)
     No direct ``time.time()`` / ``time.monotonic()`` /
     ``time.perf_counter()`` calls in ``src/repro/`` outside
@@ -68,6 +76,9 @@ ENTRY_NAMES = ("apply", "execute", "__call__")
 PRAGMA = "# lint:"
 PALLAS_ALLOWED = ("backends/pallas.py",)
 PALLAS_ALLOWED_DIRS = ("/kernels/",)
+#: only the kernel library may build schedules / launch pallas directly
+SCHEDULE_CALL_NAMES = ("pallas_call", "StreamSchedule")
+SCHEDULE_ALLOWED_DIRS = ("/kernels/",)
 #: host-clock calls the obs layer replaces (obs.now_ns / span / histograms)
 OBS_TIME_FUNCS = ("time", "monotonic", "perf_counter", "perf_counter_ns",
                   "process_time")
@@ -352,6 +363,21 @@ def _lint_module(mod: _Module, reachable: Set[int],
                 location=f"{rel}:{node.lineno}",
                 hint="route the kernel through the pallas backend's "
                      "dispatch table"))
+        if isinstance(node, ast.Call) \
+                and _terminal_name(node.func) in SCHEDULE_CALL_NAMES \
+                and "repro/" in rel \
+                and not any(d in rel for d in SCHEDULE_ALLOWED_DIRS) \
+                and not _line_has_pragma(mod, node.lineno):
+            diags.append(PlanDiagnostic(
+                code="schedule-call", severity=ERROR,
+                message=f"{_terminal_name(node.func)}(...) outside "
+                        "src/repro/kernels/ — hand-built schedules bypass "
+                        "the self-description contract the schedule "
+                        "checker verifies",
+                location=f"{rel}:{node.lineno}",
+                hint="build schedules via schedule_from_ip/"
+                     "schedule_from_stream/pad_schedule in the kernel "
+                     "library and launch kernels through its wrappers"))
         if isinstance(node, ast.ClassDef) and node.name.endswith("Plan"):
             is_dc, frozen, registered = _dataclass_info(node)
             if is_dc and not frozen and not registered \

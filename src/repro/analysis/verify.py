@@ -274,6 +274,27 @@ def _verify_flexagon(plan: FlexagonPlan, diags, loc, *,
             msg = align(plan)
             if msg:
                 _diag(diags, "block-alignment", ERROR, msg, loc)
+        # the static schedule checker (DESIGN.md §19): backends that
+        # execute from an aux StreamSchedule register via
+        # schedule_aux_key; the five invariant families are proven over
+        # the stored artifact here — so a stale/corrupt/missing schedule
+        # (e.g. re-admitted into a PlanCache after with_backend
+        # re-targeting without re-preparing) can never reach execution
+        aux_key = getattr(be, "schedule_aux_key", None)
+        if aux_key is not None and not errors_of(diags):
+            aux = plan.aux
+            if not (isinstance(aux, dict) and aux_key in aux):
+                _diag(diags, "schedule-missing", ERROR,
+                      f"backend {be.name!r} executes from "
+                      f"aux[{aux_key!r}] but the plan carries no such "
+                      "schedule", loc,
+                      hint="backend.prepare builds it at plan time; a "
+                           "plan whose aux was dropped or never rebuilt "
+                           "after re-targeting must not be admitted to a "
+                           "cache")
+            else:
+                from .schedule import check_schedule
+                check_schedule(plan, aux[aux_key], diags, loc=loc)
 
     if toplevel:
         # cache-key ↔ plan-content agreement: the fingerprint the PlanCache
@@ -451,6 +472,19 @@ def _verify_tiled(plan: TiledPlan, diags, loc, *, toplevel: bool) -> None:
                   f"composition targets {plan.backend!r}", sloc)
         _verify_flexagon(sub, diags, sloc, toplevel=False)
 
+    # stacked scan lanes trace their members' schedules through lax.scan:
+    # the stack only holds if every member was padded to shared extents
+    from .schedule import check_stack_uniform
+    if plan.scan_ok and not plan.scan_group_meta:
+        check_stack_uniform(list(enumerate(plan.plans)), diags, loc,
+                            group="op k-slab scan")
+    for d, idxs in plan.scan_group_meta:
+        members = [(i, plan.plans[i]) for i in idxs
+                   if 0 <= i < len(plan.plans)
+                   and isinstance(plan.plans[i], FlexagonPlan)]
+        check_stack_uniform(members, diags, loc,
+                            group=f"scan lane {d!r}")
+
     if toplevel:
         expect = _fingerprint(plan.occ_a, plan.occ_b, tuple(plan.shapes),
                               tuple(plan.block_shape))
@@ -528,6 +562,15 @@ def _verify_sharded(plan, diags, loc, *, toplevel: bool) -> None:
                   f"shard {i} targets backend {sub.backend!r} but the "
                   f"composition targets {plan.backend!r}", sloc)
 
+    if plan.shard_ok:
+        # stacked shard members run one shared shard_map body: their
+        # schedules must be shape-uniform or the stack (and every
+        # device's grid) desynchronizes
+        from .schedule import check_stack_uniform
+        members = [(i, sub) for i, sub in enumerate(plan.plans)
+                   if isinstance(sub, FlexagonPlan)]
+        check_stack_uniform(members, diags, loc, group="shard stack")
+
     if toplevel:
         expect = _fingerprint(plan.occ_a, plan.occ_b, tuple(plan.shapes),
                               tuple(plan.block_shape))
@@ -604,6 +647,12 @@ def verify_cache(cache, *, raise_on_error: bool = False
     name match the stored plan's, that mixed keys' per-tile choices match
     the plan's ``tile_dataflows``, and runs :func:`verify_plan` on the plan
     itself.
+
+    Because :func:`verify_plan` now includes the static schedule checker,
+    this re-verifies the *current content* of every entry — including
+    plans re-admitted into the LRU after ``with_backend`` re-targeting,
+    whose aux schedules were previously never looked at again after the
+    original insertion (a stale or foreign schedule was served silently).
     """
     diags: List[PlanDiagnostic] = []
     for key, plan in cache._plans.items():

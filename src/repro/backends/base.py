@@ -104,6 +104,17 @@ class ExecutionBackend(abc.ABC):
     #: leave this ``False`` and get the sequential shard loop instead.
     collective_merge: bool = False
 
+    #: The ``plan.aux`` key under which this backend stores the
+    #: :class:`repro.kernels.StreamSchedule` its ``execute`` consumes, or
+    #: ``None`` for backends that execute straight off the index plan.
+    #: This is the registration seam for the static schedule checker
+    #: (DESIGN.md §19): when set, ``verify_plan`` requires the key to be
+    #: present on every prepared plan and proves the five schedule
+    #: invariant families over it — a new backend (or a new scheduler on
+    #: an existing one) opts into checking by declaring its key here and
+    #: keeping the artifact a ``StreamSchedule``.
+    schedule_aux_key: Optional[str] = None
+
     @abc.abstractmethod
     def capabilities(self) -> BackendCapability:
         """Declare what this backend can run."""

@@ -53,6 +53,10 @@ class PallasBackend(ExecutionBackend):
     # through lax.scan and shard through shard_map + psum
     scan_streaming = True
     collective_merge = True
+    # registers every pallas plan with the static schedule checker
+    # (repro.analysis.schedule): verify_plan proves the five invariant
+    # families over aux["stream_schedule"] before anything executes it
+    schedule_aux_key = "stream_schedule"
 
     def __init__(self, interpret: Optional[bool] = None,
                  dense_threshold: float = 0.5):

@@ -28,6 +28,9 @@ class ReferenceBackend(ExecutionBackend):
     # sharded plans may run them inside shard_map with a psum merge
     scan_streaming = True
     collective_merge = True
+    # executes straight off the index plan — no aux schedule for the
+    # static schedule checker to verify (explicit, not just inherited)
+    schedule_aux_key = None
 
     def capabilities(self) -> BackendCapability:
         return BackendCapability(

@@ -43,6 +43,7 @@ class SimulatorBackend(ExecutionBackend):
     name = "simulator"
     scan_streaming = True          # executes through the reference path
     collective_merge = True
+    schedule_aux_key = None        # no aux schedule — reference execution
 
     def __init__(self, cfg: AcceleratorConfig = PAPER_CONFIG):
         self.cfg = cfg

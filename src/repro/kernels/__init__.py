@@ -16,6 +16,8 @@ from .ip_spmm import ip_spmm          # noqa: F401
 from .op_spmm import op_spmm          # noqa: F401
 from .gust_spmm import gust_spmm      # noqa: F401
 from .stream import (  # noqa: F401
+    INDEX_MAPS,
+    SCHEDULE_KINDS,
     StreamSchedule,
     pad_schedule,
     schedule_from_ip,

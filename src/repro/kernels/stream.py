@@ -50,6 +50,8 @@ from ..core.dataflows import IPPlan, StreamPlan
 from .common import compiler_params, grid_spec
 
 __all__ = [
+    "INDEX_MAPS",
+    "SCHEDULE_KINDS",
     "StreamSchedule",
     "schedule_from_ip",
     "schedule_from_stream",
@@ -57,6 +59,12 @@ __all__ = [
     "stream_spmm",
     "stream_panel_spmm",
 ]
+
+#: the two kernel disciplines a schedule can target: ``"dest"`` is the
+#: destination-major block-run kernel (:func:`stream_spmm`, IP/OP),
+#: ``"panel"`` the stationary row-panel kernel (:func:`stream_panel_spmm`,
+#: Gustavson).  Static schedule aux — uniform across any stacked family.
+SCHEDULE_KINDS = ("dest", "panel")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -78,20 +86,75 @@ class StreamSchedule:
     run_ci: np.ndarray     # (R,) int32 — destination block coords per run
     run_cj: np.ndarray     # (R,) int32
     n_runs: int            # == R (static; uniform after pad_schedule)
+    # -- self-description contract (DESIGN.md §19) ------------------------
+    # The checker (repro.analysis.schedule) verifies schedules without
+    # executing them; these fields let it split real work from padding.
+    # ``kind`` is static aux (uniform across any stacked family — lanes
+    # and shard stacks are same-dataflow); the three counters are (1,)
+    # int32 pytree *children* because their values differ per stacked
+    # member and treedefs must match for jnp.stack.
+    kind: str = "dest"            # which kernel consumes it (SCHEDULE_KINDS)
+    real_w: np.ndarray = None     # (1,) int32 — work entries that are real
+    real_r: np.ndarray = None     # (1,) int32 — runs with real destinations
+    oob: np.ndarray = None        # (1,) int32 — designated dropped pad row
+                                  # (-1: schedule carries no padding)
+
+    def __post_init__(self):
+        if self.kind not in SCHEDULE_KINDS:
+            raise ValueError(f"unknown schedule kind {self.kind!r}")
+        # Host-side constructors may omit the contract fields: default to
+        # "everything real, nothing padded".  Traced members rebuilt via
+        # tree_unflatten always pass them, so no host op touches a tracer.
+        if self.real_w is None:
+            self.real_w = np.array([np.asarray(self.a_slot).size], np.int32)
+        if self.real_r is None:
+            self.real_r = np.array([self.n_runs], np.int32)
+        if self.oob is None:
+            self.oob = np.array([-1], np.int32)
 
     def tree_flatten(self):
         return ((self.a_slot, self.b_slot, self.cj, self.is_first,
-                 self.is_last, self.run_id, self.run_ci, self.run_cj),
-                (self.n_runs,))
+                 self.is_last, self.run_id, self.run_ci, self.run_cj,
+                 self.real_w, self.real_r, self.oob),
+                (self.n_runs, self.kind))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        n_runs, kind = aux
+        return cls(*children[:8], n_runs, kind, *children[8:])
+
+    # -- concrete (host-side) accessors; not for traced members ----------
+    @property
+    def n_work(self) -> int:
+        return int(np.asarray(self.a_slot).size)
+
+    @property
+    def n_real_work(self) -> int:
+        return int(np.asarray(self.real_w).reshape(-1)[0])
+
+    @property
+    def n_real_runs(self) -> int:
+        return int(np.asarray(self.real_r).reshape(-1)[0])
+
+    @property
+    def oob_row(self) -> int:
+        return int(np.asarray(self.oob).reshape(-1)[0])
+
+    def describe(self) -> dict:
+        """The self-description contract as one plain dict (checker/CLI)."""
+        return {
+            "kind": self.kind,
+            "n_work": self.n_work,
+            "n_runs": int(self.n_runs),
+            "real_w": self.n_real_work,
+            "real_r": self.n_real_runs,
+            "oob_row": self.oob_row,
+        }
 
 
-def _empty_schedule() -> StreamSchedule:
+def _empty_schedule(kind: str = "dest") -> StreamSchedule:
     z = np.zeros(0, np.int32)
-    return StreamSchedule(z, z, z, z, z, z, z, z, 0)
+    return StreamSchedule(z, z, z, z, z, z, z, z, 0, kind)
 
 
 def _runs_from_boundaries(newrun: np.ndarray, w: int):
@@ -123,9 +186,11 @@ def schedule_from_ip(plan: IPPlan) -> StreamSchedule:
     is_last = np.zeros(w, np.int32)
     is_last[np.cumsum(counts) - 1] = 1
     run_id = np.repeat(np.arange(ri.size), counts).astype(np.int32)
+    # _pad_ip pads the pair axis but leaves npairs unchanged, so the mask
+    # already excludes pad slots: everything here is real work.
     return StreamSchedule(a_slot, b_slot, cj, is_first, is_last, run_id,
                           ri.astype(np.int32), rj.astype(np.int32),
-                          int(ri.size))
+                          int(ri.size), "dest")
 
 
 def schedule_from_stream(plan: StreamPlan, *, by_dest: bool) -> StreamSchedule:
@@ -145,9 +210,15 @@ def schedule_from_stream(plan: StreamPlan, *, by_dest: bool) -> StreamSchedule:
     cj = np.asarray(plan.cj)
     a_slot = np.asarray(plan.a_slot).astype(np.int32)
     b_slot = np.asarray(plan.b_slot).astype(np.int32)
+    kind = "dest" if by_dest else "panel"
     w = int(ci.size)
     if w == 0:
-        return _empty_schedule()
+        return _empty_schedule(kind)
+    # seg_ptr[-1] counts the plan's real entries; _pad_stream pads carry
+    # ci == oob_row > every real ci, so after the destination lexsort (and
+    # trivially in the appended-at-tail panel order) the real entries are
+    # exactly the first ``real`` positions.
+    real = int(np.asarray(plan.seg_ptr)[-1])
     if by_dest:
         order = np.lexsort((cj, ci))
         ci, cj = ci[order], cj[order]
@@ -159,9 +230,14 @@ def schedule_from_stream(plan: StreamPlan, *, by_dest: bool) -> StreamSchedule:
     run_ci = ci[is_first == 1].astype(np.int32)
     run_cj = (cj[is_first == 1] if by_dest
               else np.zeros(run_ci.size)).astype(np.int32)
+    real_r = int(run_id[real - 1]) + 1 if real > 0 else 0
+    oob = int(ci[real]) if real < w else -1
     return StreamSchedule(a_slot, b_slot, cj.astype(np.int32),
                           is_first, is_last, run_id,
-                          run_ci, run_cj, int(run_ci.size))
+                          run_ci, run_cj, int(run_ci.size), kind,
+                          np.array([real], np.int32),
+                          np.array([real_r], np.int32),
+                          np.array([oob], np.int32))
 
 
 def pad_schedule(s: StreamSchedule, w_total: int, r_total: int,
@@ -182,6 +258,12 @@ def pad_schedule(s: StreamSchedule, w_total: int, r_total: int,
             f"(W={w_total}, R={r_total})")
     if wpad == 0 and rpad == 0:
         return s
+    if s.oob_row >= 0 and s.oob_row != oob_row:
+        # in-schedule pads (_pad_stream) and run-slot pads would target
+        # different rows — the checker could no longer prove either dropped
+        raise ValueError(
+            f"conflicting pad destinations: schedule already pads to row "
+            f"{s.oob_row}, pad_schedule asked for {oob_row}")
     zero = np.zeros(wpad, np.int32)
     one = np.ones(wpad, np.int32)
     return StreamSchedule(
@@ -197,7 +279,52 @@ def pad_schedule(s: StreamSchedule, w_total: int, r_total: int,
         np.concatenate([np.asarray(s.run_cj, np.int32),
                         np.zeros(rpad, np.int32)]),
         r_total,
+        s.kind,
+        np.asarray(s.real_w, np.int32),
+        np.asarray(s.real_r, np.int32),
+        np.array([oob_row], np.int32),
     )
+
+
+# -- scalar-prefetched BlockSpec index maps -------------------------------
+# Named module-level functions (not inline lambdas) so repro.analysis.jaxpr
+# can trace and audit them by schedule kind without rebuilding a
+# pallas_call.  Each takes the grid step plus the kernel's scalar-prefetch
+# operands and returns the block index tuple for its operand stream.
+
+
+def _dest_a_map(w, sa, sb, fst, lst, rid):
+    return (sa[w], 0, 0)
+
+
+def _dest_b_map(w, sa, sb, fst, lst, rid):
+    return (sb[w], 0, 0)
+
+
+def _dest_out_map(w, sa, sb, fst, lst, rid):
+    return (rid[w], 0, 0)
+
+
+def _panel_a_map(w, sa, sb, cj, fst, lst, rid):
+    return (sa[w], 0, 0)
+
+
+def _panel_b_map(w, sa, sb, cj, fst, lst, rid):
+    return (sb[w], 0, 0)
+
+
+def _panel_out_map(w, sa, sb, cj, fst, lst, rid):
+    return (rid[w], 0, 0)
+
+
+#: per schedule kind: (num_scalar_prefetch, {operand: index map}).  The
+#: checker's jaxpr pass audits exactly these functions; keep them in sync
+#: with the grid specs below.
+INDEX_MAPS = {
+    "dest": (5, {"a": _dest_a_map, "b": _dest_b_map, "out": _dest_out_map}),
+    "panel": (6, {"a": _panel_a_map, "b": _panel_b_map,
+                  "out": _panel_out_map}),
+}
 
 
 def _run_kernel(a_slot_ref, b_slot_ref, is_first_ref, is_last_ref,
@@ -257,13 +384,10 @@ def _stream_spmm(a_data, b_data, sched, *, out_grid, out_shape, out_dtype,
         num_scalar_prefetch=5,
         grid=(w_total,),
         in_specs=[
-            pl.BlockSpec((1, bm, bk),
-                         lambda w, sa, sb, fst, lst, rid: (sa[w], 0, 0)),
-            pl.BlockSpec((1, bk, bn),
-                         lambda w, sa, sb, fst, lst, rid: (sb[w], 0, 0)),
+            pl.BlockSpec((1, bm, bk), _dest_a_map),
+            pl.BlockSpec((1, bk, bn), _dest_b_map),
         ],
-        out_specs=pl.BlockSpec(
-            (1, bm, bn), lambda w, sa, sb, fst, lst, rid: (rid[w], 0, 0)),
+        out_specs=pl.BlockSpec((1, bm, bn), _dest_out_map),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
     runs = pl.pallas_call(
@@ -342,14 +466,10 @@ def _stream_panel_spmm(a_data, b_data, sched, *, out_grid, out_shape,
         num_scalar_prefetch=6,
         grid=(w_total,),
         in_specs=[
-            pl.BlockSpec((1, bm, bk),
-                         lambda w, sa, sb, cj, fst, lst, rid: (sa[w], 0, 0)),
-            pl.BlockSpec((1, bk, bn),
-                         lambda w, sa, sb, cj, fst, lst, rid: (sb[w], 0, 0)),
+            pl.BlockSpec((1, bm, bk), _panel_a_map),
+            pl.BlockSpec((1, bk, bn), _panel_b_map),
         ],
-        out_specs=pl.BlockSpec(
-            (1, bm, n_padded),
-            lambda w, sa, sb, cj, fst, lst, rid: (rid[w], 0, 0)),
+        out_specs=pl.BlockSpec((1, bm, n_padded), _panel_out_map),
         scratch_shapes=[pltpu.VMEM((bm, n_padded), jnp.float32)],
     )
     runs = pl.pallas_call(

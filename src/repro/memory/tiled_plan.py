@@ -117,7 +117,32 @@ def _pad_ip(plan: df.IPPlan, p_max: int) -> df.IPPlan:
 
 
 def _stack_plans(plans):
-    """Stack uniform slab plans leaf-wise (phase-1 work, done once)."""
+    """Stack uniform slab plans leaf-wise (phase-1 work, done once).
+
+    Guards uniformity up front: every member must flatten to the same
+    treedef (same aux, e.g. ``StreamSchedule`` ``(n_runs, kind)``) and the
+    matching leaves must share shapes, otherwise ``jnp.stack`` would fail
+    deep inside ``tree_map`` with an opaque error.  The static schedule
+    checker (``repro.analysis.schedule.check_stack_uniform``) catches the
+    same mismatch at verify time; this is the build-time backstop.
+    """
+    leaves0, treedef0 = jax.tree_util.tree_flatten(plans[0])
+    shapes0 = [getattr(x, "shape", ()) for x in leaves0]
+    for i, p in enumerate(plans[1:], start=1):
+        leaves, treedef = jax.tree_util.tree_flatten(p)
+        if treedef != treedef0:
+            raise ValueError(
+                f"_stack_plans: member {i} has a different pytree structure "
+                f"than member 0 (e.g. mismatched schedule kind/n_runs aux); "
+                f"got {treedef} vs {treedef0}")
+        shapes = [getattr(x, "shape", ()) for x in leaves]
+        if shapes != shapes0:
+            bad = next((j, shapes[j], shapes0[j])
+                       for j in range(len(shapes)) if shapes[j] != shapes0[j])
+            raise ValueError(
+                f"_stack_plans: member {i} leaf {bad[0]} has shape {bad[1]} "
+                f"but member 0 has {bad[2]}; slab plans must be uniform to "
+                f"stack for the scan path")
     return jax.tree_util.tree_map(
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *plans)
 

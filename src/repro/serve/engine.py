@@ -157,6 +157,22 @@ class ServeEngine:
         """``serve.latency.*`` histogram summaries (count/p50/p90/p99)."""
         return self.metrics.snapshot(prefix="serve.latency.")
 
+    def verify_plans(self) -> List[Any]:
+        """Audit every plan currently cached for serving (DESIGN.md §19).
+
+        Runs :func:`repro.analysis.verify_cache` — the full plan
+        invariants *plus* the static schedule checker — over the sparse
+        FFN's LRU as it stands now, so a serving loop can prove that
+        re-admitted/re-targeted entries (not just original insertions)
+        still carry race-free, in-bounds, deterministic schedules.
+        Returns the diagnostics ([] for engines without a sparse FFN).
+        """
+        if self.sparse_ffn is None:
+            return []
+        from ..analysis import verify_cache
+
+        return list(verify_cache(self.sparse_ffn.plan_cache))
+
     def _sync_plan_stats(self):
         if self.sparse_ffn is not None:
             ps = self._plan_stats

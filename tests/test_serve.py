@@ -227,3 +227,45 @@ def test_slot_reuse_parity(model_and_params):
     fresh.submit(Request(1, p1, max_new_tokens=6))
     assert reused == fresh.run_to_completion()[1]
     assert reused == _reference_greedy(model, params, p1, 6)
+
+
+def test_verify_plans_audits_live_cache(model_and_params):
+    """``ServeEngine.verify_plans`` runs the full analysis layer — plan
+    invariants + the static schedule checker — over the sparse FFN's LRU
+    as it currently stands, and flags a corrupted re-admission."""
+    import dataclasses
+
+    from repro.models.ffn import ffn_init
+    from repro.models.sparse_linear import compress_ffn
+    from repro.configs.base import ModelConfig
+
+    cfg, model, params = model_and_params
+    fcfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                       n_heads=4, d_ff=96, vocab=64, ffn_block_sparsity=0.4)
+    fparams = ffn_init(jax.random.PRNGKey(0), fcfg)
+    fparams["block_mask"] = (jax.random.uniform(
+        jax.random.PRNGKey(9), (4, 6)) > 0.4).astype(jnp.float32)
+    comp = compress_ffn(fparams, tokens=2, block=16, backend="pallas")
+
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(model, params, slots=2, max_seq=64, sparse_ffn=comp)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab, size=5),
+                       max_new_tokens=4))
+    eng.run_to_completion()
+    assert eng.verify_plans() == []          # live cache is clean
+
+    # corrupt one cached entry the way a buggy re-admission would: same
+    # key, schedule swapped for another entry's (or dropped entirely)
+    cache = comp.plan_cache
+    key, plan = next((k, p) for k, p in cache._plans.items()
+                     if getattr(p, "aux", None)
+                     and "stream_schedule" in p.aux)
+    stripped = dataclasses.replace(
+        plan, aux={k: v for k, v in plan.aux.items()
+                   if k != "stream_schedule"})
+    cache._plans[key] = stripped
+    codes = {d.code for d in eng.verify_plans()}
+    assert "schedule-missing" in codes, codes
+
+    no_ffn = ServeEngine(model, params, slots=1, max_seq=16)
+    assert no_ffn.verify_plans() == []
